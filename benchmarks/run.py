@@ -1,0 +1,35 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,key,value`` CSV.  ``BENCH_FAST=1`` trims training budgets.
+Usage: PYTHONPATH=src python -m benchmarks.run [fig1 fig2 ... roofline]
+"""
+import os
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import figures, kernelbench, roofline
+
+    jobs = {
+        "fig1": figures.fig1_dotprod_sweep,
+        "fig2": figures.fig2_suite_bruteforce,
+        "fig5": figures.fig5_hyperparam_sweep,
+        "fig6": figures.fig6_action_spaces,
+        "fig7": figures.fig7_benchmarks,
+        "fig8": figures.fig8_polybench,
+        "fig9": figures.fig9_mibench,
+        "kernelbench": kernelbench.run,
+        "roofline": roofline.main,
+    }
+    args = [a for a in sys.argv[1:] if a in jobs] or list(jobs)
+    for name in args:
+        t0 = time.time()
+        print(f"\n### {name} ###")
+        jobs[name]()
+        print(f"### {name} done in {time.time()-t0:.1f}s ###")
+
+
+if __name__ == '__main__':
+    main()

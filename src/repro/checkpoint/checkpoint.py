@@ -1,0 +1,125 @@
+"""Sharded, atomic, async checkpointing with auto-resume (no orbax).
+
+Layout:  <dir>/step_<N>/host_<i>.npz + manifest.json
+* atomic: written to ``.tmp-`` then renamed; a manifest is written last, so
+  a partially-written step directory is never considered restorable.
+* async: ``save_async`` hands the (host-local, already-device-fetched)
+  arrays to a writer thread — training continues immediately.
+* GC: ``keep_n`` newest complete checkpoints are retained.
+* restore picks the newest *complete* step (manifest present), which makes
+  crash/preemption recovery a no-op for the trainer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flat(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        keys.append(jax.tree_util.keystr(path))
+    return keys, [l for _, l in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, host_index: int = 0,
+                 host_count: int = 1):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.host_index = host_index
+        self.host_count = host_count
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def save(self, state, step: int, block: bool = True):
+        keys, leaves, _ = _flat(state)
+        # fetch to host memory *now* (donated buffers may be reused)
+        host_leaves = [np.asarray(l) for l in leaves]
+        if block:
+            self._write(keys, host_leaves, step)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(keys, host_leaves, step),
+                daemon=True)
+            self._thread.start()
+
+    def save_async(self, state, step: int):
+        self.save(state, step, block=False)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, keys, leaves, step: int):
+        sdir = self._step_dir(step)
+        tmp = sdir + f".tmp-{self.host_index}"
+        os.makedirs(tmp, exist_ok=True)
+        path = os.path.join(tmp, f"host_{self.host_index}.npz")
+        np.savez(path, **{k: v for k, v in zip(keys, leaves)})
+        os.makedirs(sdir, exist_ok=True)
+        os.replace(path, os.path.join(sdir, f"host_{self.host_index}.npz"))
+        shutil.rmtree(tmp, ignore_errors=True)
+        if self.host_index == 0:
+            manifest = {"step": step, "host_count": self.host_count,
+                        "time": time.time(), "keys": keys}
+            mtmp = os.path.join(sdir, ".manifest.tmp")
+            with open(mtmp, "w") as f:
+                json.dump(manifest, f)
+            os.replace(mtmp, os.path.join(sdir, "manifest.json"))
+        self._gc()
+
+    # ------------------------------------------------------------------
+    def complete_steps(self):
+        steps = []
+        if not os.path.isdir(self.dir):
+            return steps
+        for name in sorted(os.listdir(self.dir)):
+            if not name.startswith("step_") or name.endswith(
+                    tuple(f".tmp-{i}" for i in range(64))):
+                continue
+            if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.complete_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: Optional[int] = None
+                ) -> Tuple[Any, Optional[int]]:
+        """Restore into the structure of ``state_like``.  Returns
+        (state, step) — (state_like, None) when nothing is restorable."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return state_like, None
+        path = os.path.join(self._step_dir(step),
+                            f"host_{self.host_index}.npz")
+        data = np.load(path)
+        keys, leaves, treedef = _flat(state_like)
+        new_leaves = []
+        for k, leaf in zip(keys, leaves):
+            arr = data[k]
+            assert arr.shape == tuple(leaf.shape), (k, arr.shape, leaf.shape)
+            new_leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+    def _gc(self):
+        steps = self.complete_steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    BlockDesc,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    supported_shapes,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "BlockDesc", "ModelConfig", "ShapeConfig",
+    "all_configs", "get_config", "supported_shapes",
+]

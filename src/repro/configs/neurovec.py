@@ -1,0 +1,47 @@
+"""The paper's own configuration: NeuroVectorizer RL hyperparameters
+(§4 Evaluation) mapped onto the TPU tile-tuning action space (DESIGN.md §2).
+"""
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class NeuroVecConfig:
+    # --- action space: power-of-two tile factors (the VF/IF analogue) ---
+    # matmul sites: (block_m, block_n, block_k); attention: (block_q, block_kv)
+    # the top corner (512, 512, 4096) overflows VMEM — over-aggressive
+    # factors "fail to compile", giving the -9 penalty a live region of the
+    # action space exactly as over-vectorization does in the paper (§3.4)
+    bm_choices: Tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512)
+    bn_choices: Tuple[int, ...] = (128, 256, 512)
+    bk_choices: Tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096)
+    bq_choices: Tuple[int, ...] = (64, 128, 256, 512, 1024)
+    bkv_choices: Tuple[int, ...] = (128, 256, 512, 1024, 2048)
+    chunk_choices: Tuple[int, ...] = (64, 128, 256, 512, 1024)
+
+    # --- embedding (code2vec analogue) ---
+    embed_dim: int = 340            # paper: 340-feature code vector
+    n_path_tokens: int = 64         # vocabulary of operand/primitive tokens
+    max_paths: int = 32             # path-contexts per site
+
+    # --- PPO (paper §4 defaults) ---
+    hidden: Tuple[int, ...] = (64, 64)   # 64x64 FCNN
+    lr: float = 5e-5
+    train_batch: int = 4000
+    sgd_minibatch: int = 128
+    ppo_epochs: int = 8
+    clip: float = 0.2
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+
+    # --- environment (reward eq. 2, §3.4 penalty) ---
+    fail_penalty: float = -9.0      # VMEM overflow == compile timeout
+    reward_noise: float = 0.0       # measurement-noise injection for tests
+
+    # --- dataset (§3.2) ---
+    n_synthetic: int = 10_000       # generated corpus size
+    train_subset: int = 5_000       # brute-force-labelled training budget
+    test_frac: float = 0.2
+
+
+DEFAULT = NeuroVecConfig()

@@ -1,0 +1,11 @@
+# The paper's primary contribution: end-to-end RL kernel-factor tuning.
+from repro.core.env import ActionSpace, CostModelEnv
+from repro.core.extractor import extract_arch_sites, extract_sites
+from repro.core.vectorizer import (TileProgram, baseline_program, inject,
+                                   program_speedup, tune, tune_step_fn)
+
+__all__ = [
+    "ActionSpace", "CostModelEnv", "extract_arch_sites", "extract_sites",
+    "TileProgram", "baseline_program", "inject", "program_speedup", "tune",
+    "tune_step_fn",
+]

@@ -1,0 +1,9 @@
+from repro.core.agents.ppo import PPOAgent
+from repro.core.agents.brute import brute_force_action, brute_force_labels
+from repro.core.agents.random_search import RandomAgent
+from repro.core.agents.nns import NNSAgent
+from repro.core.agents.dtree import DecisionTreeAgent
+from repro.core.agents.polly import polly_action
+
+__all__ = ["PPOAgent", "brute_force_action", "brute_force_labels",
+           "RandomAgent", "NNSAgent", "DecisionTreeAgent", "polly_action"]

@@ -1,0 +1,36 @@
+"""Brute-force search over the full factor space (the paper's oracle and
+the label source for the supervised methods, §3.5)."""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.env import CostModelEnv
+from repro.models.compute import KernelSite
+
+
+def brute_force_action(env: CostModelEnv, site: KernelSite
+                       ) -> Tuple[Tuple[int, int, int], float]:
+    """Exhaustive argmin of cost.  Returns (action_indices, best_cost)."""
+    sizes = env.space.valid_sizes(site.kind)
+    best_a, best_c = (0, 0, 0), float("inf")
+    for a in itertools.product(*(range(s) for s in sizes)):
+        c = env.cost(site, a)
+        if c is not None and c < best_c:
+            best_a, best_c = a, c
+    return best_a, best_c
+
+
+def brute_force_labels(env: CostModelEnv, sites: List[KernelSite]
+                       ) -> np.ndarray:
+    """(n_sites, 3) optimal action indices — brute-force labels."""
+    return np.array([brute_force_action(env, s)[0] for s in sites],
+                    np.int32)
+
+
+def n_evaluations(env: CostModelEnv, sites) -> int:
+    """How many compile+run evaluations brute force costs (the paper's
+    35x-more-samples claim)."""
+    return sum(env.space.n_actions(s.kind) for s in sites)

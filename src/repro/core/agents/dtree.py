@@ -1,0 +1,92 @@
+"""CART decision tree on the learned code embeddings (paper §3.5, Fig. 7).
+
+Pure-numpy classification tree over the flattened action index, trained on
+brute-force labels.  Per-kind trees (action semantics differ by site kind).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class _Node:
+    feature: int = -1
+    thresh: float = 0.0
+    left: Optional["_Node"] = None
+    right: Optional["_Node"] = None
+    label: int = 0
+
+
+def _gini(y, n_classes):
+    if len(y) == 0:
+        return 0.0
+    counts = np.bincount(y, minlength=n_classes)
+    p = counts / len(y)
+    return 1.0 - (p * p).sum()
+
+
+def _build(X, y, n_classes, depth, max_depth, min_samples, rng):
+    node = _Node(label=int(np.bincount(y, minlength=n_classes).argmax()))
+    if depth >= max_depth or len(y) < min_samples or len(np.unique(y)) == 1:
+        return node
+    best_gain, best = 0.0, None
+    parent = _gini(y, n_classes)
+    # random feature subsample keeps this O(n log n)-ish at 340 dims
+    feats = rng.choice(X.shape[1], size=min(48, X.shape[1]), replace=False)
+    for f in feats:
+        vals = X[:, f]
+        qs = np.quantile(vals, (0.25, 0.5, 0.75))
+        for t in qs:
+            m = vals <= t
+            if m.sum() < 2 or (~m).sum() < 2:
+                continue
+            g = parent - (m.mean() * _gini(y[m], n_classes)
+                          + (~m).mean() * _gini(y[~m], n_classes))
+            if g > best_gain:
+                best_gain, best = g, (f, t, m)
+    if best is None:
+        return node
+    f, t, m = best
+    node.feature, node.thresh = int(f), float(t)
+    node.left = _build(X[m], y[m], n_classes, depth + 1, max_depth,
+                       min_samples, rng)
+    node.right = _build(X[~m], y[~m], n_classes, depth + 1, max_depth,
+                        min_samples, rng)
+    return node
+
+
+def _predict_one(node, x):
+    while node.feature >= 0:
+        node = node.left if x[node.feature] <= node.thresh else node.right
+    return node.label
+
+
+class DecisionTreeAgent:
+    def __init__(self, embed_fn, space, train_sites, labels: np.ndarray,
+                 max_depth: int = 12, min_samples: int = 4, seed: int = 0):
+        self.embed_fn = embed_fn
+        self.space = space
+        self.trees = {}
+        X = embed_fn(train_sites)
+        rng = np.random.default_rng(seed)
+        kinds = sorted({s.kind for s in train_sites})
+        for kind in kinds:
+            idx = [i for i, s in enumerate(train_sites) if s.kind == kind]
+            sizes = space.valid_sizes(kind)
+            flat = (labels[idx, 0] * sizes[1] * sizes[2]
+                    + labels[idx, 1] * sizes[2] + labels[idx, 2])
+            n_classes = sizes[0] * sizes[1] * sizes[2]
+            self.trees[kind] = _build(X[idx], flat.astype(np.int64),
+                                      n_classes, 0, max_depth, min_samples,
+                                      rng)
+
+    def act(self, sites):
+        X = self.embed_fn(sites)
+        out = []
+        for i, s in enumerate(sites):
+            flat = _predict_one(self.trees[s.kind], X[i])
+            out.append(self.space.unflatten(s.kind, int(flat)))
+        return np.array(out, np.int64)

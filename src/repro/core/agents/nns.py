@@ -1,0 +1,30 @@
+"""Nearest-neighbor search on the learned code embeddings (paper §3.5):
+after end-to-end RL training, the embedding generator is frozen and NNS
+predicts the brute-force-labelled action of the closest training site."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NNSAgent:
+    def __init__(self, embed_fn, train_sites, labels: np.ndarray):
+        self.embed_fn = embed_fn
+        self.keys = self._norm(embed_fn(train_sites))
+        self.labels = labels
+        self.train_kinds = np.array([s.kind for s in train_sites])
+
+    @staticmethod
+    def _norm(x):
+        return x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
+
+    def act(self, sites):
+        q = self._norm(self.embed_fn(sites))
+        sims = q @ self.keys.T                        # (B, n_train) cosine
+        # restrict to same-kind neighbors (different kinds have different
+        # action semantics)
+        out = []
+        for i, s in enumerate(sites):
+            m = self.train_kinds == s.kind
+            row = np.where(m, sims[i], -np.inf)
+            out.append(self.labels[int(row.argmax())])
+        return np.array(out, np.int64)

@@ -1,0 +1,310 @@
+"""PPO contextual bandit in pure JAX (paper §2.3, §3.3, §4).
+
+One episode = one loop/site (contextual bandit).  A single network embeds
+the site (code2vec analogue, trained end-to-end) and emits a *joint* action
+over the factor heads — the configuration the paper found best (§3.3).
+Action-space ablations for Fig. 6:
+
+* ``discrete``  (default): 3 masked categorical heads (VF/IF-style indices).
+* ``cont1``: one continuous output decoding to a flattened action index.
+* ``cont2``: one continuous output per head, rounded to the nearest index.
+* ``two_agents``: independent policies per head (the paper's inferior
+  baseline from §3.3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import embedding as emb
+from repro.core.env import ActionSpace, CostModelEnv
+from repro.models.compute import KernelSite
+
+_KIND_IDX = {"matmul": 0, "attention": 1, "chunk_scan": 2}
+
+
+# ---------------------------------------------------------------------------
+# network
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b))
+                       * math.sqrt(2.0 / a), "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp(params, x, final_tanh=False):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def agent_init(key, nv: NeuroVecConfig, head_sizes, mode: str):
+    ks = jax.random.split(key, 6)
+    hid = list(nv.hidden)
+    n_out = (sum(head_sizes) if mode in ("discrete", "two_agents")
+             else (2 if mode == "cont1" else 2 * len(head_sizes)))
+    return {
+        "embedder": emb.embedder_init(ks[0]),
+        "trunk": _mlp_init(ks[1], [emb.EMBED_DIM] + hid),
+        "pi": _mlp_init(ks[2], [hid[-1], n_out]),
+        "vf": _mlp_init(ks[3], [hid[-1], 1]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# distributions
+# ---------------------------------------------------------------------------
+
+def _head_logits(nv: NeuroVecConfig, head_sizes, out, valid_sizes):
+    """Split flat logits into masked per-head logits.
+    valid_sizes: (B, 3) int — per-sample valid head lengths."""
+    logits = []
+    off = 0
+    for h, size in enumerate(head_sizes):
+        lg = out[:, off:off + size]
+        idx = jnp.arange(size)[None, :]
+        lg = jnp.where(idx < valid_sizes[:, h:h + 1], lg, -1e30)
+        logits.append(lg)
+        off += size
+    return logits
+
+
+def policy_forward(params, nv, head_sizes, contexts, mask, valid_sizes,
+                   mode: str):
+    """-> (per-head logits or (mu, logstd), value)."""
+    code = emb.embed_sites(params["embedder"], contexts, mask)
+    h = jnp.tanh(_mlp(params["trunk"], code))
+    out = _mlp(params["pi"], h)
+    v = _mlp(params["vf"], h)[:, 0]
+    if mode in ("discrete", "two_agents"):
+        return _head_logits(nv, head_sizes, out, valid_sizes), v
+    return out, v     # continuous params
+
+
+def sample_discrete(key, logits_list):
+    acts, logps, ent = [], 0.0, 0.0
+    for i, lg in enumerate(logits_list):
+        k = jax.random.fold_in(key, i)
+        a = jax.random.categorical(k, lg)
+        lp = jax.nn.log_softmax(lg)
+        logps += jnp.take_along_axis(lp, a[:, None], 1)[:, 0]
+        p = jnp.exp(lp)
+        ent += -(p * jnp.where(p > 0, lp, 0.0)).sum(-1)
+        acts.append(a)
+    return jnp.stack(acts, -1), logps, ent
+
+
+def logp_discrete(logits_list, actions):
+    logps, ent = 0.0, 0.0
+    for i, lg in enumerate(logits_list):
+        lp = jax.nn.log_softmax(lg)
+        logps += jnp.take_along_axis(lp, actions[:, i:i + 1], 1)[:, 0]
+        p = jnp.exp(lp)
+        ent += -(p * jnp.where(p > 0, lp, 0.0)).sum(-1)
+    return logps, ent
+
+
+# continuous helpers (Fig. 6 ablations) -------------------------------------
+
+def _cont_decode(nv, head_sizes, raw, valid_sizes, mode):
+    """Map continuous samples in R -> action indices (rounded)."""
+    if mode == "cont1":
+        u = jax.nn.sigmoid(raw[:, 0])
+        n_flat = (valid_sizes[:, 0] * valid_sizes[:, 1]
+                  * valid_sizes[:, 2]).astype(jnp.float32)
+        flat = jnp.minimum((u * n_flat).astype(jnp.int32),
+                           (n_flat - 1).astype(jnp.int32))
+        s1 = valid_sizes[:, 1] * valid_sizes[:, 2]
+        a0 = flat // s1
+        a1 = (flat // valid_sizes[:, 2]) % valid_sizes[:, 1]
+        a2 = flat % valid_sizes[:, 2]
+        return jnp.stack([a0, a1, a2], -1)
+    u = jax.nn.sigmoid(raw)                                   # (B,3)
+    a = jnp.minimum((u * valid_sizes).astype(jnp.int32), valid_sizes - 1)
+    return a
+
+
+def sample_continuous(key, out, valid_sizes, mode):
+    n = 1 if mode == "cont1" else valid_sizes.shape[1]
+    mu, logstd = out[:, :n], jnp.clip(out[:, n:], -3.0, 1.0)
+    eps = jax.random.normal(key, mu.shape)
+    raw = mu + jnp.exp(logstd) * eps
+    logp = (-0.5 * (eps ** 2) - logstd
+            - 0.5 * math.log(2 * math.pi)).sum(-1)
+    ent = (logstd + 0.5 * math.log(2 * math.pi * math.e)).sum(-1)
+    return raw, logp, ent
+
+
+def logp_continuous(out, raw, mode, n_heads):
+    n = 1 if mode == "cont1" else n_heads
+    mu, logstd = out[:, :n], jnp.clip(out[:, n:], -3.0, 1.0)
+    z = (raw - mu) / jnp.exp(logstd)
+    logp = (-0.5 * (z ** 2) - logstd - 0.5 * math.log(2 * math.pi)).sum(-1)
+    ent = (logstd + 0.5 * math.log(2 * math.pi * math.e)).sum(-1)
+    return logp, ent
+
+
+# ---------------------------------------------------------------------------
+# Adam (local, tiny)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"],
+                     grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps),
+                          params, mhat, vhat)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# the agent
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PPOAgent:
+    nv: NeuroVecConfig
+    mode: str = "discrete"       # discrete | cont1 | cont2 | two_agents
+    seed: int = 0
+    lr: Optional[float] = None
+
+    def __post_init__(self):
+        self.space = ActionSpace(self.nv)
+        self.head_sizes = self.space.head_sizes
+        key = jax.random.PRNGKey(self.seed)
+        self.params = agent_init(key, self.nv, self.head_sizes, self.mode)
+        self.opt = adam_init(self.params)
+        self._lr = self.lr if self.lr is not None else self.nv.lr
+        self.history: List[dict] = []
+        self._key = jax.random.fold_in(key, 777)
+        self._jit_sample = jax.jit(self._sample_impl)
+        self._jit_update = jax.jit(self._update_impl)
+
+    # -- featurization ----------------------------------------------------
+    def feats(self, sites):
+        ctx, mask = emb.featurize_batch(sites)
+        vs = np.array([self.space.valid_sizes(s.kind) for s in sites],
+                      np.int32)
+        return jnp.asarray(ctx), jnp.asarray(mask), jnp.asarray(vs)
+
+    # -- acting -----------------------------------------------------------
+    def _sample_impl(self, params, key, ctx, mask, vs):
+        out, v = policy_forward(params, self.nv, self.head_sizes, ctx, mask,
+                                vs, self.mode)
+        if self.mode in ("discrete", "two_agents"):
+            a, logp, _ = sample_discrete(key, out)
+            return a, a.astype(jnp.float32), logp, v
+        raw, logp, _ = sample_continuous(key, out, vs, self.mode)
+        a = _cont_decode(self.nv, self.head_sizes, raw, vs, self.mode)
+        return a, raw, logp, v
+
+    def act(self, sites, sample: bool = True):
+        ctx, mask, vs = self.feats(sites)
+        if sample:
+            self._key, k = jax.random.split(self._key)
+            a, raw, logp, v = self._jit_sample(self.params, k, ctx, mask, vs)
+            return (np.asarray(a), np.asarray(raw), np.asarray(logp),
+                    np.asarray(v))
+        # greedy (deployment/inference — paper §4.2)
+        out, v = jax.jit(policy_forward, static_argnums=(1, 2, 6))(
+            self.params, self.nv, self.head_sizes, ctx, mask, vs, self.mode)
+        if self.mode in ("discrete", "two_agents"):
+            a = jnp.stack([lg.argmax(-1) for lg in out], -1)
+        else:
+            n = 1 if self.mode == "cont1" else 3
+            a = _cont_decode(self.nv, self.head_sizes, out[:, :n], vs,
+                             self.mode)
+        return np.asarray(a)
+
+    # -- PPO update ---------------------------------------------------------
+    def _update_impl(self, params, ctx, mask, vs, actions, raw, old_logp,
+                     rewards):
+        def loss_fn(p):
+            out, v = policy_forward(p, self.nv, self.head_sizes, ctx, mask,
+                                    vs, self.mode)
+            if self.mode in ("discrete", "two_agents"):
+                logp, ent = logp_discrete(out, actions)
+            else:
+                logp, ent = logp_continuous(out, raw, self.mode,
+                                            len(self.head_sizes))
+            adv = rewards - jax.lax.stop_gradient(v)
+            adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+            ratio = jnp.exp(logp - old_logp)
+            clipped = jnp.clip(ratio, 1 - self.nv.clip, 1 + self.nv.clip)
+            pg = -jnp.minimum(ratio * adv, clipped * adv).mean()
+            vloss = ((v - rewards) ** 2).mean()
+            loss = (pg + self.nv.value_coef * vloss
+                    - self.nv.entropy_coef * ent.mean())
+            return loss, (pg, vloss)
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, grads
+
+    def update(self, sites, actions, raw, old_logp, rewards):
+        ctx, mask, vs = self.feats(sites)
+        actions = jnp.asarray(actions)
+        raw = jnp.asarray(raw)
+        old_logp = jnp.asarray(old_logp)
+        rewards = jnp.asarray(rewards, jnp.float32)
+        n = len(sites)
+        mb = min(self.nv.sgd_minibatch, n)
+        losses = []
+        for _ in range(self.nv.ppo_epochs):
+            self._key, k = jax.random.split(self._key)
+            perm = np.asarray(jax.random.permutation(k, n))
+            for i in range(0, n - mb + 1, mb):
+                sl = perm[i:i + mb]
+                loss, grads = self._jit_update(
+                    self.params, ctx[sl], mask[sl], vs[sl], actions[sl],
+                    raw[sl], old_logp[sl], rewards[sl])
+                self.params, self.opt = adam_update(
+                    self.params, grads, self.opt, self._lr)
+                losses.append(float(loss))
+        return float(np.mean(losses))
+
+    # -- training loop (contextual bandit) ---------------------------------
+    def train(self, sites, env: CostModelEnv, total_steps: int,
+              batch: Optional[int] = None, log_every: int = 1,
+              rng_seed: int = 0):
+        batch = batch or self.nv.train_batch
+        rng = np.random.default_rng(rng_seed)
+        steps = 0
+        while steps < total_steps:
+            idx = rng.integers(0, len(sites), size=min(batch,
+                                                       total_steps - steps))
+            batch_sites = [sites[i] for i in idx]
+            a, raw, logp, v = self.act(batch_sites)
+            rewards = env.rewards_batch(batch_sites, a)
+            loss = self.update(batch_sites, a, raw, logp, rewards)
+            steps += len(batch_sites)
+            self.history.append({"steps": steps,
+                                 "reward_mean": float(rewards.mean()),
+                                 "loss": loss})
+        return self.history
+
+    # -- embedding for downstream supervised methods (paper §3.5) ----------
+    def code_vectors(self, sites) -> np.ndarray:
+        ctx, mask, _ = self.feats(sites)
+        return np.asarray(emb.embed_sites(self.params["embedder"], ctx,
+                                          mask))

@@ -1,0 +1,18 @@
+"""Random search: one uniform action per site (paper Fig. 7 — performs
+*worse* than the baseline, evidencing that the RL policy learned structure)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class RandomAgent:
+    def __init__(self, space, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+
+    def act(self, sites):
+        out = []
+        for s in sites:
+            sizes = self.space.valid_sizes(s.kind)
+            out.append([self.rng.integers(0, n) for n in sizes])
+        return np.array(out, np.int64)

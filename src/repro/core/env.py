@@ -1,0 +1,96 @@
+"""The contextual-bandit environment (paper §3.3–3.4).
+
+State  = kernel site (embedded by the agent's code-embedding generator).
+Action = joint discrete factor indices — (i_bm, i_bn, i_bk) for matmul,
+         (i_bq, i_bkv, ·) for attention, (i_chunk, ·, ·) for chunk scans —
+         the VF/IF analogue, powers of two only (eq. 3).
+Reward = (t_baseline − t_action) / t_baseline                       (eq. 2)
+         with the −9 penalty for VMEM-overflow tiles (§3.4's compile
+         timeout).  On TPU hardware the cost model is swapped for wall-clock
+         measurement of the compiled kernel (``MeasuredEnv`` hook).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import costmodel
+from repro.models.compute import KernelSite
+
+
+@dataclass(frozen=True)
+class ActionSpace:
+    """Per-kind factor arrays + unified 3-head indexing with masking."""
+
+    cfg: NeuroVecConfig
+
+    def choices(self, kind: str) -> Tuple[Tuple[int, ...], ...]:
+        c = self.cfg
+        if kind == "matmul":
+            return (c.bm_choices, c.bn_choices, c.bk_choices)
+        if kind == "attention":
+            return (c.bq_choices, c.bkv_choices, (1,))
+        if kind == "chunk_scan":
+            return (c.chunk_choices, (1,), (1,))
+        raise ValueError(kind)
+
+    @property
+    def head_sizes(self) -> Tuple[int, int, int]:
+        c = self.cfg
+        return (max(len(c.bm_choices), len(c.bq_choices), len(c.chunk_choices)),
+                max(len(c.bn_choices), len(c.bkv_choices)),
+                len(c.bk_choices))
+
+    def valid_sizes(self, kind: str) -> Tuple[int, int, int]:
+        return tuple(len(x) for x in self.choices(kind))
+
+    def tiles(self, kind: str, action: Sequence[int]) -> Tuple[int, ...]:
+        ch = self.choices(kind)
+        return tuple(ch[d][min(int(action[d]), len(ch[d]) - 1)]
+                     for d in range(3))
+
+    def n_actions(self, kind: str) -> int:
+        return int(np.prod(self.valid_sizes(kind)))
+
+    def unflatten(self, kind: str, flat: int) -> Tuple[int, int, int]:
+        s = self.valid_sizes(kind)
+        return (flat // (s[1] * s[2]), (flat // s[2]) % s[1], flat % s[2])
+
+
+class CostModelEnv:
+    """Reward oracle backed by the analytic TPU cost model."""
+
+    def __init__(self, nv_cfg: NeuroVecConfig, seed: int = 0):
+        self.cfg = nv_cfg
+        self.space = ActionSpace(nv_cfg)
+        self._rng = np.random.default_rng(seed)
+
+    # -- the paper's eq. 2 --
+    def reward(self, site: KernelSite, action: Sequence[int]) -> float:
+        tiles = self.space.tiles(site.kind, action)
+        t = costmodel.site_cost(site, tiles)
+        if t is None:
+            return float(self.cfg.fail_penalty)
+        t_base = costmodel.baseline_cost(site)
+        if self.cfg.reward_noise > 0:
+            t *= float(np.exp(self._rng.normal(0, self.cfg.reward_noise)))
+        return float((t_base - t) / t_base)
+
+    def cost(self, site: KernelSite, action: Sequence[int]) -> Optional[float]:
+        return costmodel.site_cost(site, self.space.tiles(site.kind, action))
+
+    def speedup(self, site: KernelSite, action: Sequence[int]) -> float:
+        """t_baseline / t_action (clamped to the penalty semantics)."""
+        t = self.cost(site, action)
+        t_base = costmodel.baseline_cost(site)
+        if t is None:
+            return 0.1                  # illegal: 10x slower, as the penalty
+        return float(t_base / t)
+
+    def rewards_batch(self, sites, actions) -> np.ndarray:
+        return np.array([self.reward(s, a) for s, a in zip(sites, actions)],
+                        np.float32)

@@ -1,0 +1,53 @@
+"""Kernel-site extraction — the paper's "automatic loop extractor" (§3).
+
+Traces a model's step functions abstractly (``jax.eval_shape`` — no compute,
+no allocation) with the :class:`SiteRecorder` installed; every tunable op the
+model executes registers its concrete shapes/dtypes.  The output feeds the
+code-embedding generator exactly as extracted loop bodies feed code2vec.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models import compute
+from repro.models.lm import build_model
+
+
+def _abstract_batch(cfg: ModelConfig, batch: int, seq: int):
+    sds = jax.ShapeDtypeStruct
+    b = {"tokens": sds((batch, seq), jnp.int32),
+         "targets": sds((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision":
+        n = cfg.n_frontend_tokens
+        b["tokens"] = sds((batch, seq - n), jnp.int32)
+        b["targets"] = sds((batch, seq - n), jnp.int32)
+        b["frontend_embeds"] = sds((batch, n, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        b["src_embeds"] = sds((batch, seq, cfg.d_model), jnp.float32)
+    return b
+
+
+def extract_sites(fn, *abstract_args) -> List[compute.KernelSite]:
+    """Trace ``fn`` over ShapeDtypeStructs, collecting kernel sites."""
+    rec = compute.SiteRecorder()
+    with compute.compute_mode("xla", recorder=rec):
+        jax.eval_shape(fn, *abstract_args)
+    return rec.unique_sites()
+
+
+def extract_arch_sites(arch: str, batch: int = 8,
+                       seq: int = 2048) -> List[compute.KernelSite]:
+    """All tunable sites in one training step of an assigned architecture."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_specs = _abstract_batch(cfg, batch, seq)
+
+    def loss_fn(params, b):
+        return model.train_loss(params, b)[0]
+
+    return extract_sites(loss_fn, params_shapes, batch_specs)

@@ -1,0 +1,80 @@
+"""Public NeuroVectorizer API — extract, tune, inject (paper Fig. 3+4).
+
+The trained agent is deployed *inference-only* (paper §4.2): ``tune()``
+maps each extracted kernel site to its factor tuple; ``inject()`` installs
+the resulting :class:`TileProgram` so every ``pl.pallas_call`` in the model
+picks up its tuned BlockSpecs — the analogue of writing
+``#pragma clang loop vectorize_width(VF) interleave_count(IF)``.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.neurovec import DEFAULT, NeuroVecConfig
+from repro.core import costmodel
+from repro.core.env import ActionSpace, CostModelEnv
+from repro.core.extractor import extract_sites
+from repro.models import compute
+from repro.models.compute import KernelSite
+
+
+@dataclass
+class TileProgram:
+    """site key -> tile tuple; the 'pragma file' for a model."""
+    tiles: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.tiles, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "TileProgram":
+        with open(path) as f:
+            return cls({k: tuple(v) for k, v in json.load(f).items()})
+
+
+def tune(sites: List[KernelSite], agent, space: ActionSpace) -> TileProgram:
+    """Greedy (inference-mode) factor assignment for every site."""
+    if not sites:
+        return TileProgram()
+    actions = agent.act(sites, sample=False) if hasattr(
+        agent, "act") else agent(sites)
+    prog = TileProgram()
+    for s, a in zip(sites, actions):
+        prog.tiles[s.key()] = space.tiles(s.kind, a)
+    return prog
+
+
+def baseline_program(sites: List[KernelSite]) -> TileProgram:
+    return TileProgram({s.key(): costmodel.baseline_tiles(s) for s in sites})
+
+
+@contextlib.contextmanager
+def inject(program: TileProgram, interpret: bool = False):
+    """Run model code with the tuned tiles routed through Pallas kernels."""
+    with compute.compute_mode("pallas", tiles=program.tiles,
+                              interpret=interpret):
+        yield
+
+
+def tune_step_fn(step_fn, abstract_args, agent,
+                 nv: NeuroVecConfig = DEFAULT) -> TileProgram:
+    """End-to-end: extract sites from a step function and tune them."""
+    sites = extract_sites(step_fn, *abstract_args)
+    return tune(sites, agent, ActionSpace(nv))
+
+
+def program_speedup(program: TileProgram, sites: List[KernelSite],
+                    env: Optional[CostModelEnv] = None) -> float:
+    """Aggregate modelled speedup of a program over the heuristic baseline."""
+    t_base = sum(costmodel.baseline_cost(s) for s in sites)
+    t_new = 0.0
+    for s in sites:
+        tiles = program.tiles.get(s.key())
+        c = (costmodel.site_cost(s, tiles) if tiles is not None
+             else costmodel.baseline_cost(s))
+        t_new += c if c is not None else 10 * costmodel.baseline_cost(s)
+    return t_base / t_new

@@ -1,0 +1,64 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+``make_compressor`` returns a hook for ``make_train_step``: each gradient
+tensor is quantized to int8 against a per-tensor scale with an error-
+feedback accumulator (the classical EF-SGD trick, keeps convergence), then
+dequantized for the optimizer.  Under pjit the *reduce* of FSDP/DP gradients
+happens on the dequantized values; on deployments where collective bytes
+dominate (see EXPERIMENTS.md roofline), ``compressed_psum`` shows the
+shard_map pattern that moves int8 over the wire instead (4x fewer
+collective bytes) and reduces locally in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g, err):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq, q, scale
+
+
+def make_compressor(params_like):
+    """Stateful-via-closure EF compressor (error state threaded in metrics-
+    free form: returned grads are dequantized, residual kept inside)."""
+    state = {"err": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_like)}
+
+    def compress(grads):
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(state["err"])
+        res = [_quantize(g, e) for g, e in zip(flat_g, flat_e)]
+        deq = jax.tree_util.tree_unflatten(treedef, [r[0] for r in res])
+        state["err"] = jax.tree_util.tree_unflatten(
+            treedef, [r[1] for r in res])
+        err_norm = sum(jnp.sum(e * e) for e in jax.tree.leaves(state["err"]))
+        return deq, {"compress_err_sq": err_norm}
+
+    return compress
+
+
+def compressed_psum(x: jax.Array, mesh: Mesh, axis: str = "data"):
+    """int8-over-the-wire all-reduce: quantize -> all_gather(int8) -> local
+    f32 sum.  4x fewer collective bytes than an f32 psum (2x vs bf16)."""
+
+    def inner(xs):
+        scale = jnp.maximum(jnp.max(jnp.abs(xs)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xs / scale), -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, axis)            # int8 on the wire
+        sg = jax.lax.all_gather(scale, axis)
+        return jnp.tensordot(sg, qg.astype(jnp.float32), axes=((0,), (0,)))
+
+    from jax.experimental.shard_map import shard_map
+    n = len(x.shape)
+    spec = P(*([None] * n))
+    return shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec)(x)

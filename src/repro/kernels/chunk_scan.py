@@ -1,0 +1,78 @@
+"""SSD chunk-scan Pallas kernel (Mamba-2 / mLSTM style linear-attention).
+
+Computes, per group g (= batch x head) with a scalar-per-position log-decay:
+
+    y[t] = sum_{s<=t} exp(cum[t]-cum[s]) * (C[t].B[s]) * x[s]  (+ carried state)
+
+Grid is (G, S/Q) with the chunk dimension innermost/sequential carrying the
+(P, N) state in VMEM scratch.  The chunk size Q is the tunable factor for
+recurrent blocks (the IF analogue — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_kernel(x_ref, b_ref, c_ref, la_ref, o_ref, state_ref, *, Q: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)             # (Q, P)
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, N)
+    la = la_ref[0].astype(jnp.float32)           # (Q,) via (1, Q) block
+    cum = jnp.cumsum(la)                         # inclusive (Q,)
+
+    # intra-chunk
+    li = cum[:, None] - cum[None, :]             # decay j..i
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(causal, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update
+    seg = jnp.exp(cum[-1] - cum)                 # (Q,)
+    state_ref[...] = (state_ref[...] * jnp.exp(cum[-1])
+                      + jax.lax.dot_general(
+                          x, Bm * seg[:, None], (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def chunk_scan_pallas(x: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                      la: jax.Array, *, chunk: int,
+                      interpret: bool = False) -> jax.Array:
+    """x: (G, S, P); Bm/Cm: (G, S, N); la: (G, S) log-decay.  -> y (G, S, P)."""
+    G, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    grid = (G, S // Q)
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, Q), lambda g, c: (g, c)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda g, c: (g, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, Bm, Cm, la)

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices to build the
+(2,16,16) production mesh.  Smoke tests and benchmarks must NOT import this
+module (they want the real single device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes  # noqa: E402
+from repro.launch.mesh import make_production_mesh                         # noqa: E402
+from repro.launch.specs import input_shardings, input_specs                # noqa: E402
+from repro.models.lm import build_model                                    # noqa: E402
+from repro.optim.adamw import AdamWConfig                                  # noqa: E402
+from repro.train.steps import (make_prefill_step, make_serve_step,         # noqa: E402
+                               make_train_step)
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DT_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+             "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<res>.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (sum of result-operand
+    sizes of every collective op in the optimized, partitioned HLO)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue        # async pair: count the -start only
+        b = _shape_bytes(m.group("res"))
+        out[m.group("op")] = out.get(m.group("op"), 0) + b
+        out["total"] = out.get("total", 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum: int = 4, accum_dtype: str = "float32",
+             fsdp: bool = True, carry_tp: bool = True) -> dict:
+    cfg = get_config(arch)
+    sup = supported_shapes(cfg)[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "family": cfg.family,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+    if sup != "run":
+        return {**meta, "status": "skip", "reason": sup}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig()
+    kind, abstract = input_specs(model, shape_name, opt_cfg)
+    shardings = input_shardings(model, shape_name, mesh, abstract,
+                                fsdp=fsdp)
+
+    if kind == "train":
+        from repro.distributed import sharding as shd
+        mb_specs = shd.batch_specs(cfg, SHAPES[shape_name], mesh)
+        import jax.numpy as _jnp
+        fn = make_train_step(model, opt_cfg, accum=accum, mb_specs=mb_specs,
+                             accum_dtype=_jnp.dtype(accum_dtype))
+        donate = (0,)
+        out_sh = (shardings[0], None)
+    elif kind == "prefill":
+        fn = make_prefill_step(model)
+        donate = (2,)
+        out_sh = (None, shardings[2])
+    else:
+        fn = make_serve_step(model)
+        donate = (3,)
+        out_sh = (None, None, shardings[3])
+
+    from repro.distributed.sharding import dp_axes
+    from repro.models import compute as _compute
+
+    t0 = time.time()
+    with mesh, _compute.sharding_hints(dp=dp_axes(mesh), tp="model",
+                                        carry_tp=carry_tp):
+        jitted = jax.jit(fn, in_shardings=shardings, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*abstract)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    res = {**meta, "status": "ok", "kind": kind,
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "accum": accum if kind == "train" else None,
+           "knobs": {"accum_dtype": accum_dtype, "fsdp": fsdp,
+                     "carry_tp": carry_tp}}
+
+    try:
+        ma = compiled.memory_analysis()
+        res["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+        res["memory"]["peak_bytes"] = (
+            res["memory"]["argument_bytes"] + res["memory"]["output_bytes"]
+            + res["memory"]["temp_bytes"] - res["memory"]["alias_bytes"])
+    except Exception as e:  # pragma: no cover
+        res["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        res["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or "utilization" in k
+                       )} if isinstance(ca, dict) else {}
+        res["flops"] = float(ca.get("flops", 0.0)) if isinstance(ca, dict) \
+            else 0.0
+        res["bytes_accessed"] = float(ca.get("bytes accessed", 0.0)) \
+            if isinstance(ca, dict) else 0.0
+    except Exception as e:  # pragma: no cover
+        res["cost"] = {"error": str(e)}
+
+    txt = compiled.as_text()
+    # loop-aware accounting (cost_analysis counts while bodies ONCE and
+    # undercounts scanned programs ~40-150x — see launch/hlo_analysis.py)
+    from repro.launch import hlo_analysis
+    ana = hlo_analysis.analyze(txt)
+    res["hlo"] = {"flops": ana["flops"], "bytes": ana["bytes"]}
+    res["collectives"] = ana["collectives"]
+    res["top_collectives"] = ana.get("top_collectives", [])
+    res["collectives_unrolled_once"] = collective_bytes(txt)
+    res["hlo_ops"] = {op: txt.count(f" {op}(")
+                      for op in ("fusion", "while", "dot", "convolution",
+                                 "custom-call")}
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--accum", type=int, default=4)
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-carry-tp", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                path = os.path.join(
+                    args.out, f"{mesh_name}__{arch}__{shape_name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {mesh_name} {arch} {shape_name}")
+                    continue
+                print(f"[run]    {mesh_name} {arch} {shape_name} ...",
+                      flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod,
+                                   accum=args.accum,
+                                   accum_dtype=args.accum_dtype,
+                                   fsdp=not args.no_fsdp,
+                                   carry_tp=not args.no_carry_tp)
+                except Exception:
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "FAIL",
+                           "error": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                st = res["status"]
+                extra = ""
+                if st == "ok":
+                    mem = res.get("memory", {}).get("peak_bytes", 0)
+                    extra = (f" compile={res['compile_s']:.0f}s "
+                             f"peak={mem/2**30:.2f}GiB "
+                             f"coll={res['collectives'].get('total',0)/2**20:.0f}MiB")
+                print(f"         -> {st}{extra}", flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (the dry-run lowers against these)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models.lm import Model
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import make_train_state
+
+sds = jax.ShapeDtypeStruct
+
+
+def batch_specs_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    """Training/prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    n_pre = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    b = {"tokens": sds((B, S - n_pre), jnp.int32),
+         "targets": sds((B, S - n_pre), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["frontend_embeds"] = sds((B, n_pre, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        b["src_embeds"] = sds((B, S, cfg.d_model), jnp.float32)
+    return b
+
+
+def input_specs(model: Model, shape_name: str,
+                opt_cfg: AdamWConfig = AdamWConfig()):
+    """-> (kind, abstract args tuple) for the step that this shape lowers:
+    train -> train_step(state, batch); prefill -> (params, batch, cache);
+    decode -> serve_step(params, token, pos, cache)."""
+    cfg = model.cfg
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        state = jax.eval_shape(
+            lambda k: make_train_state(model, k, opt_cfg),
+            jax.random.PRNGKey(0))
+        return "train", (state, batch_specs_abstract(cfg, shape))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = jax.eval_shape(
+        lambda: model.make_cache(shape.global_batch, shape.seq_len,
+                                 jnp.dtype(cfg.dtype)))
+    if shape.kind == "prefill":
+        return "prefill", (params, batch_specs_abstract(cfg, shape), cache)
+    token = sds((shape.global_batch, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    return "decode", (params, token, pos, cache)
+
+
+def input_shardings(model: Model, shape_name: str, mesh: Mesh, abstract,
+                    fsdp: bool = True):
+    """NamedShardings matching ``input_specs`` output."""
+    cfg = model.cfg
+    shape = SHAPES[shape_name]
+    dp = shd.dp_axes(mesh)
+    bspec = shd.batch_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        state, batch = abstract
+        state_specs = {"params": shd.param_specs(state["params"], mesh,
+                                                 fsdp=fsdp),
+                       "opt": shd.param_specs(state["opt"], mesh, fsdp=fsdp),
+                       "step": P()}
+        return (shd.named(mesh, state_specs), shd.named(mesh, bspec))
+    if shape.kind == "prefill":
+        params, batch, cache = abstract
+        return (shd.named(mesh, shd.param_specs(params, mesh, fsdp=fsdp)),
+                shd.named(mesh, bspec),
+                shd.named(mesh, shd.cache_specs(cfg, shape, mesh, cache)))
+    params, token, pos, cache = abstract
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    tok_spec = P(dp, None) if shape.global_batch % n_dp == 0 \
+        and shape.global_batch >= n_dp else P(None, None)
+    return (shd.named(mesh, shd.param_specs(params, mesh, fsdp=fsdp)),
+            shd.named(mesh, tok_spec),
+            shd.named(mesh, P()),
+            shd.named(mesh, shd.cache_specs(cfg, shape, mesh, cache)))

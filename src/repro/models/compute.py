@@ -1,0 +1,374 @@
+"""Site-aware compute wrappers — the injection point for the paper's technique.
+
+NeuroVectorizer injects ``#pragma clang loop vectorize_width(VF)
+interleave_count(IF)`` above each loop.  Here, every tunable hot op in the
+model zoo goes through :func:`matmul` / :func:`flash_attention` with a *site*
+label.  Three modes:
+
+* ``xla``     — plain jnp ops (the default; what the dry-run lowers).
+* ``pallas``  — route through the Pallas kernels in ``repro.kernels`` using
+  tile factors from the active :class:`TileProgram` (the "pragma" — see
+  ``repro.core.vectorizer``).  Missing sites fall back to the heuristic
+  baseline tiles, exactly as un-pragma'd loops fall back to LLVM's cost model.
+* recording   — a :class:`SiteRecorder` is installed; tracing a step function
+  (``jax.eval_shape``) registers every site with its concrete shapes/dtypes.
+  This is the paper's *loop extractor* (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Global mode (single-threaded tracing; a context stack is sufficient)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _ComputeState:
+    mode: str = "xla"                  # "xla" | "pallas"
+    tiles: Optional[dict] = None       # site -> tile tuple (the TileProgram)
+    recorder: Optional["SiteRecorder"] = None
+    interpret: bool = False            # Pallas interpret mode (CPU validation)
+
+
+_STATE = _ComputeState()
+
+
+@contextlib.contextmanager
+def compute_mode(mode: str = "xla", tiles: Optional[dict] = None,
+                 recorder: Optional["SiteRecorder"] = None,
+                 interpret: bool = False):
+    global _STATE
+    prev = _STATE
+    _STATE = _ComputeState(mode=mode, tiles=tiles, recorder=recorder,
+                           interpret=interpret)
+    try:
+        yield _STATE
+    finally:
+        _STATE = prev
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hints.  Model code is mesh-agnostic; the launcher
+# installs logical axis names (dp tuple, tp name) and hot activations get
+# pinned with with_sharding_constraint.  Without hints (unit tests, single
+# device) every constraint is a no-op.  GSPMD otherwise occasionally drops
+# the batch sharding of scan carries / one-hots and replicates multi-GiB
+# tensors (observed on the 256-chip dry-run — see DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+_HINTS: dict = {"active": False, "dp": None, "tp": None,
+                "carry_tp": True}
+
+
+@contextlib.contextmanager
+def sharding_hints(dp, tp, carry_tp: bool = True):
+    prev = dict(_HINTS)
+    _HINTS.update(active=True, dp=dp, tp=tp, carry_tp=carry_tp)
+    try:
+        yield
+    finally:
+        _HINTS.update(prev)
+
+
+def constrain(x: jax.Array, builder):
+    """builder(dp, tp) -> PartitionSpec; applied only when hints active."""
+    if not _HINTS["active"]:
+        return x
+    spec = builder(_HINTS["dp"], _HINTS["tp"])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Site recording (the "loop extractor" output format)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelSite:
+    """A tunable kernel instance — the analogue of one extracted loop."""
+
+    site: str            # stable label, e.g. "attn.qkv_proj"
+    kind: str            # "matmul" | "attention" | "chunk_scan"
+    m: int               # rows (tokens) — matmul M / attention q_len
+    n: int               # cols — matmul N / attention head_dim
+    k: int               # contraction — matmul K / attention kv_len
+    batch: int = 1       # leading batch (attention B*heads; matmul 1)
+    dtype: str = "bfloat16"
+    transpose: str = "nn"    # operand layouts
+    causal: bool = False
+    fused_ops: int = 0       # elementwise ops fused at the site (bias/act)
+
+    def key(self) -> str:
+        return (f"{self.kind}:{self.site}:m{self.m}n{self.n}k{self.k}"
+                f"b{self.batch}:{self.dtype}:{self.transpose}"
+                f"{':c' if self.causal else ''}:f{self.fused_ops}")
+
+
+class SiteRecorder:
+    def __init__(self):
+        self.sites: dict[str, KernelSite] = {}
+
+    def record(self, s: KernelSite):
+        self.sites[s.key()] = s
+
+    def unique_sites(self) -> list[KernelSite]:
+        return list(self.sites.values())
+
+
+# ---------------------------------------------------------------------------
+# matmul wrapper
+# ---------------------------------------------------------------------------
+
+
+def matmul(x: jax.Array, w: jax.Array, *, site: str,
+           fused_ops: int = 0) -> jax.Array:
+    """``x @ w`` where x is (..., K) and w is (K, N)."""
+    *lead, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (site, x.shape, w.shape)
+    M = int(math.prod(lead)) if lead else 1
+    st = _STATE
+    if st.recorder is not None:
+        st.recorder.record(KernelSite(
+            site=site, kind="matmul", m=M, n=int(N), k=int(K),
+            dtype=str(x.dtype), fused_ops=fused_ops))
+    if st.mode == "pallas":
+        from repro.kernels import ops as kops
+        ksite = KernelSite(site=site, kind="matmul", m=M, n=int(N), k=int(K),
+                           dtype=str(x.dtype), fused_ops=fused_ops)
+        tiles = None if st.tiles is None else st.tiles.get(ksite.key())
+        x2 = x.reshape(M, K)
+        y = kops.matmul(x2, w, tiles=tiles, interpret=st.interpret)
+        return y.reshape(*lead, N)
+    return jnp.matmul(x, w)
+
+
+def einsum(spec: str, *args, site: str) -> jax.Array:
+    """Non-canonical contractions (per-head block-diagonal projections etc.).
+
+    Recorded as a matmul site with flattened dims; always executed by XLA —
+    the Pallas path only specializes the canonical (M,K)x(K,N) shape.
+    """
+    st = _STATE
+    if st.recorder is not None:
+        out = jax.eval_shape(lambda *a: jnp.einsum(spec, *a), *args)
+        n = int(out.shape[-1])
+        m = int(math.prod(out.shape[:-1])) if out.ndim > 1 else 1
+        # contraction length from the (last) weight operand
+        k = int(args[-1].shape[-2]) if args[-1].ndim >= 2 else 1
+        st.recorder.record(KernelSite(
+            site=site, kind="matmul", m=m, n=n, k=k,
+            dtype=str(args[0].dtype)))
+    return jnp.einsum(spec, *args)
+
+
+# ---------------------------------------------------------------------------
+# attention wrapper (chunked online-softmax "flash" reference in XLA)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    site: str, causal: bool,
+                    q_chunk: int = 1024, kv_chunk: int = 2048,
+                    scale: Optional[float] = None,
+                    base_offset=0) -> jax.Array:
+    """Memory-chunked attention.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    ``base_offset``: absolute position of q[0] (for causal decode masking);
+    may be a traced scalar.
+
+    In ``pallas`` mode routes to the flash-attention kernel with tuned
+    (block_q, block_kv); in ``xla`` mode runs the same algorithm with
+    lax.scan over chunks so 32k-prefill never materializes (Sq, Skv) scores.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]        # MLA: v head dim may differ from qk head dim
+    assert Hq % Hkv == 0
+    st = _STATE
+    if st.recorder is not None:
+        st.recorder.record(KernelSite(
+            site=site, kind="attention", m=Sq, n=D, k=Skv, batch=B * Hq,
+            dtype=str(q.dtype), causal=causal))
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    if st.mode == "pallas" and Sq > 1:
+        from repro.kernels import ops as kops
+        ksite = KernelSite(site=site, kind="attention", m=Sq, n=D, k=Skv,
+                           batch=B * Hq, dtype=str(q.dtype), causal=causal)
+        tiles = None if st.tiles is None else st.tiles.get(ksite.key())
+        return kops.flash_attention(q, k, v, causal=causal, scale=scale,
+                                    tiles=tiles, interpret=st.interpret)
+
+    if _HINTS["active"] and Sq > 1:
+        # Megatron-style TP attention: expand GQA groups so heads shard
+        # over "model" even when Hq % tp != 0 (GSPMD pads intermediates;
+        # without the explicit constraint it falls back to full replication
+        # of the (bq, bkv) score blocks — observed 2+ GiB/device).
+        from jax.sharding import PartitionSpec as _P
+        if Hq != Hkv:
+            k = jnp.repeat(k, Hq // Hkv, axis=1)
+            v = jnp.repeat(v, Hq // Hkv, axis=1)
+            Hkv = Hq
+        hspec = lambda dp, tp: _P(dp if B > 1 else None, tp, None, None)
+        q = constrain(q, hspec)
+        k = constrain(k, hspec)
+        v = constrain(v, hspec)
+
+    if Sq == 1:
+        group = Hq // Hkv
+        qf = q.reshape(B, Hkv, group, Sq, D)
+        # decode: single position, no chunking needed in q
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k).astype(jnp.float32) * scale
+        if causal:
+            kpos = jnp.arange(Skv)
+            mask = kpos[None, :] <= (base_offset + jnp.arange(Sq))[:, None]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+        return o.reshape(B, Hq, Sq, Dv)
+
+    # prefill / train: memory-efficient attention with a flash-style custom
+    # VJP.  A plain scan-based implementation saves its per-step (bq, bkv)
+    # probability blocks for backward — at 32L x 32k that is tens of GiB per
+    # device (measured).  The custom VJP saves only (q, k, v, o, lse) and
+    # recomputes blocks in the backward scans.
+    if Hq != Hkv:                       # expand GQA groups (grad sums back)
+        k = jnp.repeat(k, Hq // Hkv, axis=1)
+        v = jnp.repeat(v, Hq // Hkv, axis=1)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, Skv)
+    return _mem_efficient_attention(
+        q, k, v, causal=causal, scale=scale, bq=q_chunk, bkv=kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# memory-efficient attention (custom VJP, flash algorithm in XLA)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mem_efficient_attention(q, k, v, causal, scale, bq, bkv):
+    o, _ = _mea_fwd_impl(q, k, v, causal, scale, bq, bkv)
+    return o
+
+
+def _mea_fwd_impl(q, k, v, causal, scale, bq, bkv):
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    Dv = v.shape[-1]
+    n_q, n_kv = Sq // bq, Skv // bkv
+    kc = jnp.moveaxis(k.reshape(B, H, n_kv, bkv, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, H, n_kv, bkv, Dv), 2, 0)
+    qc = jnp.moveaxis(q.reshape(B, H, n_q, bq, D), 2, 0)
+
+    def q_body(_, qi_idx):
+        qi, iq = qi_idx                            # (B,H,bq,D)
+        q_pos = iq * bq + jnp.arange(bq)
+
+        def kv_body(carry, kv_idx):
+            m, l, acc = carry
+            kj, vj, ik = kv_idx
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                k_pos = ik * bkv + jnp.arange(bkv)
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, H, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, bq), jnp.float32),
+                jnp.zeros((B, H, bq, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init,
+                                      (kc, vc, jnp.arange(n_kv)))
+        l = jnp.maximum(l, 1e-30)
+        o = (acc / l[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l)
+        return None, (o, lse)
+
+    _, (o, lse) = jax.lax.scan(q_body, None, (qc, jnp.arange(n_q)))
+    o = jnp.moveaxis(o, 0, 2).reshape(B, H, Sq, Dv)
+    lse = jnp.moveaxis(lse, 0, 2).reshape(B, H, Sq)
+    return o, lse
+
+
+def _mea_fwd(q, k, v, causal, scale, bq, bkv):
+    o, lse = _mea_fwd_impl(q, k, v, causal, scale, bq, bkv)
+    return o, (q, k, v, o, lse)
+
+
+def _mea_bwd(causal, scale, bq, bkv, res, do):
+    q, k, v, o, lse = res
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    Dv = v.shape[-1]
+    n_q, n_kv = Sq // bq, Skv // bkv
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)  # BHS
+
+    qc = jnp.moveaxis(q.reshape(B, H, n_q, bq, D), 2, 0)
+    doc = jnp.moveaxis(do.reshape(B, H, n_q, bq, Dv), 2, 0)
+    lsec = jnp.moveaxis(lse.reshape(B, H, n_q, bq), 2, 0)
+    dltc = jnp.moveaxis(delta.reshape(B, H, n_q, bq), 2, 0)
+    kc = jnp.moveaxis(k.reshape(B, H, n_kv, bkv, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, H, n_kv, bkv, Dv), 2, 0)
+
+    def kv_body(dq, kv_idx):
+        kj, vj, ik = kv_idx
+        k_pos = ik * bkv + jnp.arange(bkv)
+
+        def q_body(carry, q_idx):
+            dkj, dvj = carry
+            qi, doi, lsei, dlti, iq = q_idx
+            q_pos = iq * bq + jnp.arange(bq)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])               # (B,H,bq,bkv)
+            dvj = dvj + jnp.einsum("bhqk,bhqd->bhkd", p,
+                                   doi.astype(jnp.float32))
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doi.astype(jnp.float32),
+                            vj.astype(jnp.float32))
+            ds = p * (dp - dlti[..., None]) * scale
+            dkj = dkj + jnp.einsum("bhqk,bhqd->bhkd", ds,
+                                   qi.astype(jnp.float32))
+            dqi = jnp.einsum("bhqk,bhkd->bhqd", ds, kj.astype(jnp.float32))
+            return (dkj, dvj), dqi
+
+        init = (jnp.zeros((B, H, bkv, D), jnp.float32),
+                jnp.zeros((B, H, bkv, Dv), jnp.float32))
+        (dkj, dvj), dq_blocks = jax.lax.scan(
+            q_body, init, (qc, doc, lsec, dltc, jnp.arange(n_q)))
+        dq = dq + jnp.moveaxis(dq_blocks, 0, 2).reshape(B, H, Sq, D)
+        return dq, (dkj, dvj)
+
+    dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_body, dq0, (kc, vc, jnp.arange(n_kv)))
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, H, Skv, D)
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, H, Skv, Dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_mem_efficient_attention.defvjp(_mea_fwd, _mea_bwd)

@@ -1,0 +1,207 @@
+"""Token-choice top-k MoE with GShard-style capacity dispatch.
+
+Dispatch/combine are INDEX-based gathers wrapped in custom VJPs whose
+backward passes are *also* gathers (via the inverse index maps) — three
+reasons, all measured on the 256-chip dry-run:
+
+ 1. one-hot dispatch einsums would dominate cost_analysis by ~1000x and
+    poison the roofline (DESIGN.md §5);
+ 2. a (K*T, d) gathered-rows intermediate replicates (30 GiB/device);
+ 3. the *transpose* of a gather is a scatter, and GSPMD's scatter
+    partitioning falls back to replicating the (T, d) operand (16+ GiB) —
+    expressing each backward as the dual gather keeps every heavy tensor
+    sharded in both passes.
+
+Expert tensors are stacked (E, d, f), sharded E over "model" (expert
+parallelism) + d over "data" (FSDP); dispatch buffers shard (E, C) over
+(TP, DP), so the token->expert movement is GSPMD's all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as _P
+
+from repro.configs.base import ModelConfig
+from repro.models import compute
+from repro.models.common import dense_init, split_keys
+
+CAPACITY_FACTOR = 1.25
+
+_ECD = lambda dp, tp: _P(tp, dp, None)
+_TD = lambda dp, tp: _P(dp, None)
+
+
+def moe_init(cfg: ModelConfig, key, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = split_keys(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "ewi": dense_init(ks[1], (e, d, f), dtype),
+        "ewg": dense_init(ks[2], (e, d, f), dtype),
+        "ewo": dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_wi"] = dense_init(ks[4], (d, fs), dtype)
+        p["shared_wg"] = dense_init(ks[5], (d, fs), dtype)
+        p["shared_wo"] = dense_init(ks[6], (fs, d), dtype)
+    return p
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int) -> int:
+    c = int(n_tokens * top_k * CAPACITY_FACTOR / n_experts)
+    return max(8, -(-c // 8) * 8)   # multiple of 8, >= 8
+
+
+# ---------------------------------------------------------------------------
+# dispatch: xt (T,d) -> buf (E,C,d); backward is K gathers, not a scatter
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _dispatch(xt, idx, eidx, pos_tk, keep_tk):
+    return _dispatch_fwd(xt, idx, eidx, pos_tk, keep_tk)[0]
+
+
+def _dispatch_fwd(xt, idx, eidx, pos_tk, keep_tk):
+    T = xt.shape[0]
+    valid = idx >= 0
+    buf = jnp.where(valid[..., None], xt[jnp.clip(idx, 0, T - 1)], 0)
+    buf = compute.constrain(buf, _ECD)
+    return buf, (idx.shape[1], eidx, pos_tk, keep_tk, T)
+
+
+def _dispatch_bwd(res, dbuf):
+    C, eidx, pos_tk, keep_tk, T = res
+    K = eidx.shape[1]
+    d = dbuf.shape[-1]
+    # single-axis (flat) gathers only: GSPMD partitions those; the 2-index
+    # form replicates the operand
+    dbuf_flat = compute.constrain(dbuf.reshape(-1, d), _TD)
+    d_xt = 0.0
+    for k in range(K):
+        flat = eidx[:, k] * C + jnp.clip(pos_tk[:, k], 0, C - 1)
+        rows = compute.constrain(dbuf_flat[flat], _TD)
+        d_xt = d_xt + jnp.where(keep_tk[:, k:k + 1], rows, 0)
+    return compute.constrain(d_xt, _TD), None, None, None, None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+# ---------------------------------------------------------------------------
+# combine: y_buf (E,C,d), w (T,K) -> y (T,d); backward gathers via idx/kidx
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _combine(y_buf, w, idx, kidx, eidx, pos_tk):
+    return _combine_fwd(y_buf, w, idx, kidx, eidx, pos_tk)[0]
+
+
+def _combine_fwd(y_buf, w, idx, kidx, eidx, pos_tk):
+    E, C, d = y_buf.shape
+    K = w.shape[1]
+    y_flat = compute.constrain(y_buf.reshape(-1, d), _TD)
+    y = 0.0
+    for k in range(K):
+        flat = eidx[:, k] * C + jnp.clip(pos_tk[:, k], 0, C - 1)
+        y_k = compute.constrain(y_flat[flat], _TD)
+        y = y + y_k.astype(jnp.float32) * w[:, k:k + 1]
+    y = compute.constrain(y, _TD)
+    return y, (y_buf, w, idx, kidx, eidx, pos_tk)
+
+
+def _combine_bwd(res, dy):
+    y_buf, w, idx, kidx, eidx, pos_tk = res
+    E, C, d = y_buf.shape
+    T, K = w.shape
+    dy = compute.constrain(dy, _TD)
+    valid = idx >= 0
+    # d_y_buf[e,c] = w[idx[e,c], kidx[e,c]] * dy[idx[e,c]] — flat gathers
+    w_flat = w.T.reshape(-1)                                # slot-major (K*T,)
+    w_ec = jnp.where(valid, w_flat[jnp.clip(kidx, 0, K - 1) * T
+                                   + jnp.clip(idx, 0, T - 1)], 0.0)
+    d_y_buf = jnp.where(valid[..., None],
+                        dy[jnp.clip(idx, 0, T - 1)], 0) * w_ec[..., None]
+    d_y_buf = compute.constrain(d_y_buf.astype(y_buf.dtype), _ECD)
+    # d_w[t,k] = dy[t] . y_buf[e_k(t), pos_k(t)]            — flat gathers
+    y_flat = compute.constrain(y_buf.reshape(-1, d), _TD)
+    dws = []
+    for k in range(K):
+        flat = eidx[:, k] * C + jnp.clip(pos_tk[:, k], 0, C - 1)
+        y_k = compute.constrain(y_flat[flat], _TD)
+        dws.append((dy * y_k.astype(jnp.float32)).sum(-1))
+    d_w = jnp.stack(dws, axis=1)
+    return d_y_buf, d_w, None, None, None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+# ---------------------------------------------------------------------------
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux) where aux = {"lb_loss", "router_z"}."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = compute.matmul(xt.astype(jnp.float32), p["router"],
+                            site="moe.router")                  # (T,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                        # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch-style load balance + router z-loss) ----
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (T * K))
+    lb_loss = E * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- capacity assignment (slot-major priority, as GShard) ----
+    C = _capacity(T, E, K)
+    a_e = eidx.T.reshape(-1)                                    # (K*T,) slot-major
+    onehot = jax.nn.one_hot(a_e, E, dtype=jnp.int32)            # (KT,E)
+    # expert dim over TP: the cumsum is per-column, so it partitions cleanly
+    onehot = compute.constrain(onehot, lambda dp, tp: _P(None, tp))
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1     # (KT,)
+    keep = pos < C
+    tok = jnp.tile(jnp.arange(T), K)                            # (KT,)
+    slot = jnp.repeat(jnp.arange(K), T)                         # (KT,)
+
+    # (E, C) inverse maps: token id and slot id per expert slot.  These two
+    # scatters are the only scatters in the layer and are int32 (E, C) —
+    # a few MiB, safe to let GSPMD replicate.
+    pc = jnp.where(keep, pos, C)
+    idx = jnp.full((E, C), -1, jnp.int32).at[a_e, pc].set(
+        tok.astype(jnp.int32), mode="drop")
+    kidx = jnp.full((E, C), 0, jnp.int32).at[a_e, pc].set(
+        slot.astype(jnp.int32), mode="drop")
+    idx = compute.constrain(idx, lambda dp, tp: _P(tp, dp))
+    kidx = compute.constrain(kidx, lambda dp, tp: _P(tp, dp))
+
+    pos_tk = pos.reshape(K, T).T                                # (T,K)
+    keep_tk = keep.reshape(K, T).T
+    w = gate * keep_tk.astype(jnp.float32)                      # (T,K)
+
+    # ---- dispatch / expert compute / combine ----
+    xt_c = compute.constrain(xt, _TD)
+    buf = _dispatch(xt_c, idx, eidx, pos_tk, keep_tk)           # (E,C,d)
+    h = compute.constrain(jnp.einsum("ecd,edf->ecf", buf, p["ewi"]), _ECD)
+    g = jax.nn.silu(
+        compute.constrain(jnp.einsum("ecd,edf->ecf", buf, p["ewg"]), _ECD))
+    y_buf = compute.constrain(
+        jnp.einsum("ecf,efd->ecd", h * g, p["ewo"]), _ECD)       # (E,C,d)
+    y = _combine(y_buf, w, idx, kidx, eidx, pos_tk)             # (T,d) f32
+
+    if cfg.n_shared_experts:
+        hs = (jax.nn.silu(compute.matmul(xt, p["shared_wg"],
+                                         site="moe.shared_gate", fused_ops=1))
+              * compute.matmul(xt, p["shared_wi"], site="moe.shared_up"))
+        y = y + compute.matmul(hs, p["shared_wo"],
+                               site="moe.shared_down").astype(jnp.float32)
+
+    aux = {"lb_loss": lb_loss, "router_z": router_z}
+    return y.astype(x.dtype).reshape(B, S, d), aux

@@ -1,0 +1,177 @@
+"""Mamba mixer in the SSD (state-space dual / Mamba-2) formulation.
+
+Training/prefill run the chunkwise-parallel algorithm: intra-chunk terms are
+4 batched matmuls over (chunk x chunk) decay-masked score matrices (exactly
+the structure our Pallas chunk-scan kernel tiles); inter-chunk state is a
+`lax.scan` carrying (B, h, P, N).  Decode is the O(1) recurrence.
+
+The chunk size ``cfg.ssm_chunk`` is a tunable kernel-site factor — the IF
+analogue for recurrent blocks (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import compute
+from repro.models.common import dense_init, split_keys
+
+
+def ssm_init(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di, n, h = cfg.d_inner_ssm, cfg.ssm_state_dim, cfg.n_ssm_heads
+    w = cfg.ssm_conv_width
+    ks = split_keys(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        # in_proj -> [z(di) | x(di) | B(n) | C(n) | dt(h)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv": dense_init(ks[1], (w, conv_ch), dtype, scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C).  If conv_state (B,W-1,C)
+    is given (decode), prepend it; returns (y, new_state)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B,S+W-1,C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _project(cfg: ModelConfig, p, x):
+    di, n, h = cfg.d_inner_ssm, cfg.ssm_state_dim, cfg.n_ssm_heads
+    zxbcdt = compute.matmul(x, p["in_proj"], site="ssm.in_proj")
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    di, n = cfg.d_inner_ssm, cfg.ssm_state_dim
+    xs = xbc[..., :di]
+    Bm = xbc[..., di:di + n]
+    Cm = xbc[..., di + n:]
+    return xs, Bm, Cm
+
+
+def apply_ssm(cfg: ModelConfig, p, x, *, cache: Optional[dict] = None,
+              decode_pos=None):
+    """x: (B,S,d). Returns (y, new_cache_or_None).
+
+    Cache: {"conv": (B, W-1, di+2n), "ssd": (B, h, P, N)}.
+    """
+    B, S, _ = x.shape
+    di, N, h = cfg.d_inner_ssm, cfg.ssm_state_dim, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    A = -jnp.exp(p["A_log"])                                   # (h,) negative
+
+    z, xbc, dt_raw = _project(cfg, p, x)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,S,h)
+
+    if cache is not None and decode_pos is not None and S == 1:
+        # ---------- O(1) decode recurrence ----------
+        xbc_c, conv_state = _causal_conv(xbc, p["conv"], cache["conv"])
+        xs, Bm, Cm = _split_xbc(cfg, jax.nn.silu(xbc_c))
+        xh = xs.reshape(B, 1, h, P)[:, 0]                      # (B,h,P)
+        a = jnp.exp(dt[:, 0] * A[None])                        # (B,h)
+        dBx = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh.astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        state = cache["ssd"] * a[..., None, None] + dBx        # (B,h,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, 0].astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        y = _gated_out(cfg, p, y, z)
+        return y, {"conv": conv_state, "ssd": state}
+
+    # ---------- chunkwise-parallel train / prefill ----------
+    if compute._STATE.recorder is not None:
+        compute._STATE.recorder.record(compute.KernelSite(
+            site="ssm.chunk_scan", kind="chunk_scan", m=cfg.ssm_chunk,
+            n=P, k=N, batch=B * h * (S // max(1, cfg.ssm_chunk)),
+            dtype=str(x.dtype)))
+    xbc_c, conv_state = _causal_conv(xbc, p["conv"])
+    xs, Bm, Cm = _split_xbc(cfg, jax.nn.silu(xbc_c))
+
+    Q = min(cfg.ssm_chunk, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        # zero-pad to a chunk multiple: dt=0 => decay exp(0)=1 and zero
+        # input, i.e. identity steps that leave the carried state untouched
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        xs, Bm, Cm, dt = (jnp.pad(t, pad) for t in (xs, Bm, Cm, dt))
+    nc = Sp // Q
+
+    def resh(t, last):
+        return t.reshape(B, nc, Q, *last)
+
+    xh = resh(xs, (h, P)).astype(jnp.float32)                  # (B,nc,Q,h,P)
+    Bc = resh(Bm, (N,)).astype(jnp.float32)                    # (B,nc,Q,N)
+    Cc = resh(Cm, (N,)).astype(jnp.float32)
+    dtc = resh(dt, (h,))                                       # (B,nc,Q,h)
+
+    init = (cache["ssd"].astype(jnp.float32) if cache is not None
+            else jnp.zeros((B, h, P, N), jnp.float32))
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # scan over chunks: the (B,Q,Q,h) decay mask exists for ONE chunk at a
+    # time — materializing it for all chunks at once was measured at tens
+    # of GiB/device on the 32L hybrid config
+    def chunk_body(state, inp):
+        xc, bc, cc, dc = inp            # (B,Q,h,P),(B,Q,N),(B,Q,N),(B,Q,h)
+        la = dc * A[None, None]                                # (B,Q,h)
+        cum = jnp.cumsum(la, axis=1)
+        Lm = cum[:, :, None, :] - cum[:, None, :, :]           # (B,Q,Q,h)
+        Lm = jnp.where(causal[None, :, :, None], jnp.exp(Lm), 0.0)
+        cb = jnp.einsum("biN,bjN->bij", cc, bc)                # (B,Q,Q)
+        xdt = xc * dc[..., None]                               # (B,Q,h,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", cb[..., None] * Lm, xdt)
+        y_inter = jnp.einsum("bih,biN,bhpN->bihp",
+                             jnp.exp(cum), cc, state)
+        seg = jnp.exp(cum[:, -1:, :] - cum)                    # (B,Q,h)
+        new_state = (state * jnp.exp(cum[:, -1])[..., None, None]
+                     + jnp.einsum("bjh,bjN,bjhp->bhpN", seg, bc, xdt))
+        return new_state, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(
+        chunk_body, init,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bc, Cc, dtc)))
+    y = jnp.moveaxis(ys, 0, 1)                                 # (B,nc,Q,h,P)
+    y = y + p["D"][None, None, None, :, None] * xh
+    y = y.reshape(B, Sp, di)[:, :S].astype(x.dtype)
+    y = _gated_out(cfg, p, y, z)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state, "ssd": final_state}
+    return y, new_cache
+
+
+def _gated_out(cfg, p, y, z):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm"].astype(jnp.float32)).astype(y.dtype)
+    return compute.matmul(y, p["out_proj"], site="ssm.out_proj")
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, N, h = cfg.d_inner_ssm, cfg.ssm_state_dim, cfg.n_ssm_heads
+    P, W = cfg.ssm_head_dim, cfg.ssm_conv_width
+    return {"conv": jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+            "ssd": jnp.zeros((batch, h, P, N), jnp.float32)}

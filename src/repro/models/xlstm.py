@@ -1,0 +1,281 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence), both with stabilized
+exponential gating.
+
+mLSTM training uses a chunkwise-parallel form (lax.scan over chunks carrying
+the matrix state C (hd x hd), normalizer n and stabilizer m) — the same
+compute shape as the SSD chunk scan, so the Pallas chunk kernel applies.
+sLSTM is inherently serial (recurrent nonlinearity) and runs as a
+lax.scan over time with per-head block-diagonal recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import compute
+from repro.models.common import dense_init, split_keys
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = di // h
+    ks = split_keys(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), dtype),
+        "wq": dense_init(ks[1], (h, hd, hd), dtype),
+        "wk": dense_init(ks[2], (h, hd, hd), dtype),
+        "wv": dense_init(ks[3], (h, hd, hd), dtype),
+        "w_i": dense_init(ks[4], (di, h), jnp.float32, scale=0.01),
+        "w_f": dense_init(ks[5], (di, h), jnp.float32, scale=0.01),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-biased init
+        "gn": jnp.ones((di,), dtype),
+        "down": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _mlstm_qkv(cfg, p, xi):
+    """xi: (B,S,di) -> q,k,v (B,S,h,hd) via per-head block-diagonal proj."""
+    B, S, di = xi.shape
+    h = cfg.n_heads
+    hd = di // h
+    xh = xi.reshape(B, S, h, hd)
+    q = compute.einsum("bshd,hde->bshe", xh, p["wq"], site="mlstm.q")
+    k = compute.einsum("bshd,hde->bshe", xh, p["wk"], site="mlstm.k")
+    v = compute.einsum("bshd,hde->bshe", xh, p["wv"], site="mlstm.v")
+    return q, k * (1.0 / (hd ** 0.5)), v
+
+
+def apply_mlstm(cfg: ModelConfig, p, x, *, cache: Optional[dict] = None,
+                decode_pos=None, chunk: int = 256):
+    """x: (B,S,d). Cache: {"C": (B,h,hd,hd) f32, "n": (B,h,hd) f32,
+    "m": (B,h) f32}. Returns (y, new_cache_or_None)."""
+    B, S, d = x.shape
+    di = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = di // h
+    up = compute.matmul(x, p["up"], site="mlstm.up")
+    xi, z = up[..., :di], up[..., di:]
+    q, k, v = _mlstm_qkv(cfg, p, xi)
+    li = jnp.einsum("bsd,dh->bsh", xi.astype(jnp.float32), p["w_i"])
+    lf = _logsig(jnp.einsum("bsd,dh->bsh", xi.astype(jnp.float32), p["w_f"])
+                 + p["b_f"])
+
+    if cache is not None and decode_pos is not None and S == 1:
+        # ---------- O(1) decode ----------
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+        lf0, li0 = lf[:, 0], li[:, 0]                    # (B,h)
+        m1 = jnp.maximum(lf0 + m0, li0)
+        fg = jnp.exp(lf0 + m0 - m1)[..., None, None]
+        ig = jnp.exp(li0 - m1)[..., None, None]
+        kf = k[:, 0].astype(jnp.float32)                      # (B,h,hd)
+        vf = v[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32)
+        C1 = fg * C0 + ig * kf[..., :, None] * vf[..., None, :]
+        n1 = fg[..., 0] * n0 + ig[..., 0] * kf
+        num = jnp.einsum("bhd,bhde->bhe", qf, C1)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n1))
+        y = num / jnp.maximum(den, jnp.exp(-m1))[..., None]
+        y = y.reshape(B, 1, di)
+        y = _mlstm_out(cfg, p, y.astype(x.dtype), z)
+        return y, {"C": C1, "n": n1, "m": m1}
+
+    # ---------- chunkwise-parallel ----------
+    if compute._STATE.recorder is not None:
+        compute._STATE.recorder.record(compute.KernelSite(
+            site="mlstm.chunk_scan", kind="chunk_scan", m=min(chunk, S),
+            n=hd, k=hd, batch=B * h * (S // max(1, min(chunk, S))),
+            dtype=str(x.dtype)))
+    # NOTE: hd-sharding q/k/v here was tried and refuted — GSPMD padding/
+    # resharding nearly doubled executed FLOPs (EXPERIMENTS.md Cell C it2)
+    Q = min(chunk, S)
+    Sp = -(-S // Q) * Q
+    if Sp != S:
+        # identity padding: i-gate -inf (no write), f-gate log-decay 0
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, Sp - S), (0, 0)),
+                     constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, Sp - S), (0, 0)))
+    nc = Sp // Q
+    qc = q.reshape(B, nc, Q, h, hd).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, h, hd).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, h, hd).astype(jnp.float32)
+    lic = li.reshape(B, nc, Q, h)
+    lfc = lf.reshape(B, nc, Q, h)
+
+    if cache is not None:
+        init = (cache["C"], cache["n"], cache["m"])
+    else:
+        init = (jnp.zeros((B, h, hd, hd), jnp.float32),
+                jnp.zeros((B, h, hd), jnp.float32),
+                jnp.full((B, h), -1e30, jnp.float32))
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        qi, ki, vi, lii, lfi = inp              # (B,Q,h,hd)/(B,Q,h)
+        b = jnp.cumsum(lfi, axis=1)             # inclusive (B,Q,h)
+        # D_ij = b_i - b_j + li_j (j<=i)
+        D = b[:, :, None] - b[:, None, :, :] + lii[:, None]
+        D = jnp.where(causal[None, :, :, None], D, -jnp.inf)
+        m_intra = D.max(axis=2)                                 # (B,Q,h)
+        m_row = jnp.maximum(m_intra, b + m0[:, None])
+        W = jnp.exp(D - m_row[:, :, None])                      # (B,Q,Q,h)
+        qk = jnp.einsum("bqhd,bkhd->bqkh", qi, ki)
+        sc = qk * W
+        num = (jnp.einsum("bqkh,bkhd->bqhd", sc, vi)
+               + jnp.exp(b + m0[:, None] - m_row)[..., None]
+               * jnp.einsum("bqhd,bhde->bqhe", qi, C0))
+        den = (sc.sum(axis=2)
+               + jnp.exp(b + m0[:, None] - m_row)
+               * jnp.einsum("bqhd,bhd->bqh", qi, n0))
+        yq = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # state update to chunk end
+        g = b[:, -1]                                            # (B,h)
+        dec_j = g[:, None] - b + lii                            # (B,Q,h)
+        m1 = jnp.maximum(g + m0, dec_j.max(axis=1))
+        wj = jnp.exp(dec_j - m1[:, None])                       # (B,Q,h)
+        C1 = (jnp.exp(g + m0 - m1)[..., None, None] * C0
+              + jnp.einsum("bqh,bqhd,bqhe->bhde", wj, ki, vi))
+        n1 = (jnp.exp(g + m0 - m1)[..., None] * n0
+              + jnp.einsum("bqh,bqhd->bhd", wj, ki))
+        return (C1, n1, m1), yq
+
+    (C1, n1, m1), ys = jax.lax.scan(
+        body, init,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, lic, lfc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, di)[:, :S]
+    y = _mlstm_out(cfg, p, y.astype(x.dtype), z)
+    new_cache = {"C": C1, "n": n1, "m": m1} if cache is not None else None
+    return y, new_cache
+
+
+def _mlstm_out(cfg, p, y, z):
+    B, S, di = y.shape
+    h = cfg.n_heads
+    hd = di // h
+    yf = y.astype(jnp.float32).reshape(B, S, h, hd)
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(B, S, di)
+         * p["gn"].astype(jnp.float32)).astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    return compute.matmul(y, p["down"], site="mlstm.down")
+
+
+def make_mlstm_cache(cfg: ModelConfig, batch: int):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = di // h
+    return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    f = -(-(4 * d // 3) // 128) * 128    # GLU hidden, padded to lane width
+    ks = split_keys(key, 4)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d), dtype),      # i,f,z,o input
+        "r": dense_init(ks[1], (4, h, hd, hd), jnp.float32, scale=0.02),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "mlp_up": dense_init(ks[2], (d, 2 * f), dtype),
+        "mlp_down": dense_init(ks[3], (f, d), dtype),
+        "gn": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_cell(cfg, p, wx_t, state):
+    """One recurrence step. wx_t: (B,4,d) f32; state: (h,c,n,m) each (B,*)."""
+    B = wx_t.shape[0]
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    hprev, c0, n0, m0 = state                       # h: (B,d); c,n: (B,d); m: (B,d)
+    hh = hprev.reshape(B, nh, hd)
+    rec = jnp.einsum("ghde,bhd->gbhe", p["r"], hh).reshape(4, B, d)
+    pre = wx_t.transpose(1, 0, 2) + rec + p["b"].reshape(4, 1, d)
+    it, ft, zt, ot = pre[0], pre[1], pre[2], pre[3]
+    lf = _logsig(ft)
+    m1 = jnp.maximum(lf + m0, it)
+    ig = jnp.exp(it - m1)
+    fg = jnp.exp(lf + m0 - m1)
+    c1 = fg * c0 + ig * jnp.tanh(zt)
+    n1 = fg * n0 + ig
+    h1 = jax.nn.sigmoid(ot) * c1 / jnp.maximum(n1, 1e-6)
+    return (h1, c1, n1, m1)
+
+
+def apply_slstm(cfg: ModelConfig, p, x, *, cache: Optional[dict] = None,
+                decode_pos=None):
+    """x: (B,S,d). Cache: {"h","c","n","m"} each (B,d) f32."""
+    from jax.sharding import PartitionSpec as _P
+    B, S, d = x.shape
+    wx = compute.matmul(x, p["wx"], site="slstm.wx").astype(jnp.float32)
+    wx = wx.reshape(B, S, 4, d)
+    # NOTE: replicating the recurrence was tried and refuted — the
+    # batch-sharded per-step dL/dr accumulation all-reduces a full weight
+    # replica every timestep (EXPERIMENTS.md Cell C it2)
+
+    if cache is not None and decode_pos is not None and S == 1:
+        st = (cache["h"], cache["c"], cache["n"], cache["m"])
+        st = _slstm_cell(cfg, p, wx[:, 0], st)
+        y = st[0][:, None].astype(x.dtype)
+        y = _slstm_out(cfg, p, y)
+        return y, {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+
+    if cache is not None:
+        init = (cache["h"], cache["c"], cache["n"], cache["m"])
+    else:
+        z = jnp.zeros((B, d), jnp.float32)
+        init = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+
+    def body(st, wx_t):
+        st = _slstm_cell(cfg, p, wx_t, st)
+        return st, st[0]
+
+    st, hs = jax.lax.scan(body, init, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,d)
+    y = _slstm_out(cfg, p, y)
+    new_cache = ({"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+                 if cache is not None else None)
+    return y, new_cache
+
+
+def _slstm_out(cfg, p, y):
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["gn"].astype(jnp.float32)).astype(y.dtype)
+    up = compute.matmul(y, p["mlp_up"], site="slstm.mlp_up")
+    f = up.shape[-1] // 2
+    hgelu = jax.nn.gelu(up[..., :f]) * up[..., f:]
+    return compute.matmul(hgelu, p["mlp_down"], site="slstm.mlp_down")
+
+
+def make_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}

@@ -1,0 +1,84 @@
+"""AdamW with global-norm clipping and schedules (pure JAX, no optax).
+
+Moments are f32 regardless of param dtype and inherit the parameter
+sharding (ZeRO-style when params are FSDP-sharded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """-> (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:     # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    # explicit flatten/unflatten: params trees may legitimately contain
+    # tuples (stacked period slots), so tuple-unzip via tree.map is unsafe
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    res = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    unf = jax.tree_util.tree_unflatten
+    return (unf(treedef, [r[0] for r in res]),
+            {"m": unf(treedef, [r[1] for r in res]),
+             "v": unf(treedef, [r[2] for r in res]),
+             "step": step},
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,225 @@
+"""The paper's system: embedding, environment, agents, vectorizer API."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import costmodel, dataset
+from repro.core.agents import (DecisionTreeAgent, NNSAgent, PPOAgent,
+                               RandomAgent, brute_force_action,
+                               brute_force_labels, polly_action)
+from repro.core.env import ActionSpace, CostModelEnv
+from repro.core import embedding as emb
+from repro.core.vectorizer import (TileProgram, baseline_program, inject,
+                                   program_speedup, tune)
+from repro.models.compute import KernelSite
+
+NV = NeuroVecConfig(train_batch=256, sgd_minibatch=64, ppo_epochs=4)
+ENV = CostModelEnv(NV)
+SPACE = ENV.space
+
+
+def _mm(m, n, k, dtype="bfloat16"):
+    return KernelSite(site="t", kind="matmul", m=m, n=n, k=k, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# cost model + environment (reward eq. 2, §3.4 penalty)
+# ---------------------------------------------------------------------------
+
+def test_baseline_action_reward_is_zero():
+    s = _mm(4096, 4096, 4096)
+    base = costmodel.baseline_tiles(s)
+    # find the action matching the baseline tiles
+    for a0, bm in enumerate(NV.bm_choices):
+        for a1, bn in enumerate(NV.bn_choices):
+            for a2, bk in enumerate(NV.bk_choices):
+                if (bm, bn, bk) == base:
+                    r = ENV.reward(s, (a0, a1, a2))
+                    assert abs(r) < 1e-9
+                    return
+    pytest.skip("baseline tiles not in action space")
+
+
+def test_illegal_action_gets_penalty():
+    s = _mm(65536, 16384, 16384)
+    # the top-corner tiles overflow VMEM ("compile failure", §3.4)
+    a = (len(NV.bm_choices) - 1, len(NV.bn_choices) - 1,
+         len(NV.bk_choices) - 1)
+    tiles = SPACE.tiles("matmul", a)
+    assert costmodel.site_cost(s, tiles) is None, tiles
+    assert ENV.reward(s, a) == NV.fail_penalty
+
+
+def test_reward_speedup_consistency():
+    s = _mm(8192, 4608, 4608)
+    for a in [(0, 0, 0), (3, 1, 2), (4, 2, 3)]:
+        r = ENV.reward(s, a)
+        sp = ENV.speedup(s, a)
+        if ENV.cost(s, a) is not None:
+            assert abs(r - (1 - 1 / sp)) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(3, 20), n=st.integers(7, 14), k=st.integers(7, 14),
+       a0=st.integers(0, 6), a1=st.integers(0, 2), a2=st.integers(0, 4))
+def test_cost_positive_and_monotone_in_work(m, n, k, a0, a1, a2):
+    s = _mm(2 ** m, 2 ** n, 2 ** k)
+    c = ENV.cost(s, (a0, a1, a2))
+    if c is not None:
+        assert c > 0
+        s2 = _mm(2 ** (m + 1), 2 ** n, 2 ** k)   # 2x the rows
+        c2 = ENV.cost(s2, (a0, a1, a2))
+        if c2 is not None:
+            # more work never costs less (ties occur when both sizes round
+            # up to the same padded tile grid)
+            assert c2 >= c
+
+
+def test_cost_scales_with_work_when_not_overhead_bound():
+    s1 = _mm(8192, 4096, 4096)
+    s2 = _mm(16384, 4096, 4096)
+    c1 = ENV.cost(s1, (4, 1, 2))
+    c2 = ENV.cost(s2, (4, 1, 2))
+    assert c2 > 1.8 * c1
+
+
+def test_brute_force_is_lower_bound():
+    rng = np.random.default_rng(0)
+    for s in dataset.generate(20, seed=3):
+        _, best = brute_force_action(ENV, s)
+        for _ in range(10):
+            a = [rng.integers(0, n) for n in SPACE.valid_sizes(s.kind)]
+            c = ENV.cost(s, a)
+            if c is not None:
+                assert c >= best - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# embedding (code2vec analogue)
+# ---------------------------------------------------------------------------
+
+def test_featurize_is_name_free_and_deterministic():
+    s1 = KernelSite(site="attn.q", kind="matmul", m=512, n=512, k=512)
+    s2 = KernelSite(site="totally.different.name", kind="matmul",
+                    m=512, n=512, k=512)
+    f1, m1 = emb.featurize(s1)
+    f2, m2 = emb.featurize(s2)
+    np.testing.assert_array_equal(f1, f2)    # identifiers are not features
+    np.testing.assert_array_equal(m1, m2)
+
+
+def test_embedding_shape_and_similarity():
+    params = emb.embedder_init(jax.random.PRNGKey(0))
+    sites = [_mm(512, 512, 512), _mm(512, 512, 512), _mm(65536, 128, 16384)]
+    ctx, mask = emb.featurize_batch(sites)
+    vecs = np.asarray(emb.embed_sites(params, jnp.asarray(ctx),
+                                      jnp.asarray(mask)))
+    assert vecs.shape == (3, emb.EMBED_DIM)
+    assert emb.EMBED_DIM == 340              # the paper's code-vector width
+    np.testing.assert_allclose(vecs[0], vecs[1], rtol=1e-6)
+    assert np.linalg.norm(vecs[0] - vecs[2]) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# agents
+# ---------------------------------------------------------------------------
+
+def test_ppo_learns_to_beat_baseline():
+    # the paper's convergence claim: positive mean reward (= beats the
+    # heuristic baseline) within ~5k env samples
+    sites = dataset.generate(400, seed=11)
+    agent = PPOAgent(NV, lr=5e-4, seed=0)
+    hist = agent.train(sites, ENV, total_steps=6000)
+    first = np.mean([h["reward_mean"] for h in hist[:2]])
+    last = np.mean([h["reward_mean"] for h in hist[-2:]])
+    assert last > first + 1.0, (first, last)
+    assert last > 0.0, "positive reward = beats the heuristic baseline"
+
+
+def test_ppo_greedy_beats_random_on_heldout():
+    train_sites = dataset.generate(400, seed=21)
+    test_sites = dataset.generate(60, seed=22)
+    agent = PPOAgent(NV, lr=5e-4, seed=1)
+    agent.train(train_sites, ENV, total_steps=3000)
+    a_rl = agent.act(test_sites, sample=False)
+    a_rand = RandomAgent(SPACE, seed=0).act(test_sites)
+    sp_rl = np.mean([ENV.speedup(s, a) for s, a in zip(test_sites, a_rl)])
+    sp_rand = np.mean([ENV.speedup(s, a)
+                       for s, a in zip(test_sites, a_rand)])
+    assert sp_rl > sp_rand, (sp_rl, sp_rand)
+
+
+def test_nns_and_dtree_predict_labels():
+    sites = dataset.generate(120, seed=31)
+    agent = PPOAgent(NV, seed=2)         # untrained embedder is fine here
+    labels = brute_force_labels(ENV, sites)
+    nns = NNSAgent(agent.code_vectors, sites, labels)
+    pred = nns.act(sites)                # 1-NN on the training set = exact
+    assert (pred == labels).all()
+    dt = DecisionTreeAgent(agent.code_vectors, SPACE, sites, labels)
+    pred_dt = dt.act(sites)
+    sp_dt = np.mean([ENV.speedup(s, a) for s, a in zip(sites, pred_dt)])
+    sp_base = 1.0
+    assert sp_dt > sp_base               # better than always-baseline
+
+
+def test_polly_beats_baseline_on_bandwidth_bound():
+    # Polly optimizes locality only: on a bandwidth-bound site it should
+    # at least match the heuristic baseline
+    s = _mm(65536, 512, 512)
+    a = polly_action(SPACE, s)
+    assert ENV.speedup(s, a) >= 0.95
+
+
+# ---------------------------------------------------------------------------
+# vectorizer API ("pragma injection")
+# ---------------------------------------------------------------------------
+
+def test_tileprogram_roundtrip(tmp_path):
+    sites = dataset.generate(5, seed=41)
+    prog = baseline_program(sites)
+    f = str(tmp_path / "tiles.json")
+    prog.save(f)
+    prog2 = TileProgram.load(f)
+    assert prog.tiles == prog2.tiles
+
+
+def test_inject_runs_pallas_and_matches_xla():
+    from repro.models import compute
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 96))
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 128))
+    site = KernelSite(site="mlp.up", kind="matmul", m=64, n=128, k=96,
+                      dtype="float32")
+    prog = TileProgram({site.key(): (32, 128, 128)})
+    y_xla = compute.matmul(x, w, site="mlp.up")
+    with inject(prog, interpret=True):
+        y_pallas = compute.matmul(x, w, site="mlp.up")
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_extract_and_tune_end_to_end():
+    from repro.core.extractor import extract_arch_sites
+    sites = extract_arch_sites("qwen3_8b", batch=4, seq=512)
+    assert len(sites) >= 6
+    kinds = {s.kind for s in sites}
+    assert "matmul" in kinds and "attention" in kinds
+    agent = PPOAgent(NV, seed=3)
+    prog = tune(sites, agent, SPACE)
+    assert set(prog.tiles) == {s.key() for s in sites}
+    sp = program_speedup(prog, sites)
+    assert sp > 0.05                      # a valid program, even untrained
+
+
+def test_program_speedup_of_brute_force():
+    sites = dataset.generate(30, seed=51)
+    actions = [brute_force_action(ENV, s)[0] for s in sites]
+    prog = TileProgram({s.key(): SPACE.tiles(s.kind, a)
+                        for s, a in zip(sites, actions)})
+    sp = program_speedup(prog, sites)
+    assert sp > 1.5                       # headroom exists over the baseline

@@ -1,0 +1,72 @@
+"""The loop-aware HLO analyzer must stay exact on closed-form programs —
+it is the source of every roofline number (EXPERIMENTS.md §Roofline)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_PROBE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.launch.hlo_analysis import analyze
+
+w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+def f(w, x):
+    def body(x, _):
+        return jnp.tanh(x @ w), None
+    x, _ = jax.lax.scan(body, x, None, length=10)
+    return (x @ w).sum()
+
+def g(w, x):   # nested scans: 3 x 5 dots
+    def outer(x, _):
+        def inner(x, _):
+            return x @ w, None
+        x, _ = jax.lax.scan(inner, x, None, length=5)
+        return x, None
+    x, _ = jax.lax.scan(outer, x, None, length=3)
+    return x.sum()
+
+def h(w, x):   # grad through remat scan: 10 fwd + 10 recompute + 20 bwd
+    body = jax.checkpoint(lambda x, _: (jnp.tanh(x @ w), None),
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    y, _ = jax.lax.scan(body, x, None, length=10)
+    return (y ** 2).sum()
+
+D = 2 * 512 ** 3
+out = {}
+out["flat"] = analyze(jax.jit(f).lower(w, x).compile().as_text())["flops"] / (11 * D)
+out["nested"] = analyze(jax.jit(g).lower(w, x).compile().as_text())["flops"] / (15 * D)
+out["remat_grad"] = analyze(
+    jax.jit(jax.grad(h)).lower(w, x).compile().as_text())["flops"] / (40 * D)
+
+from jax.sharding import PartitionSpec as P, NamedSharding
+mesh = jax.make_mesh((8,), ("d",))
+c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "d")),
+                             NamedSharding(mesh, P("d", None)))).lower(
+    w, x).compile()
+res = analyze(c.as_text())
+out["sharded"] = res["flops"] / (11 * D / 8)
+out["has_collectives"] = res["collectives"]["total"] > 0
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_analyzer_exact_on_closed_forms():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _PROBE], capture_output=True,
+                       text=True, env=env, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for key in ("flat", "nested", "remat_grad", "sharded"):
+        assert abs(out[key] - 1.0) < 0.05, (key, out[key])
+    assert out["has_collectives"]

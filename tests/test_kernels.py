@@ -1,0 +1,156 @@
+"""Per-kernel allclose sweeps + hypothesis property tests vs ref.py oracles
+(interpret mode executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rel_err(a, b):
+    return float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+MM_SHAPES = [(64, 128, 128), (128, 256, 512), (100, 300, 200), (8, 128, 64),
+             (513, 129, 257), (16, 384, 48)]
+MM_TILES = [(32, 128, 128), (64, 256, 128), (8, 128, 512)]
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes(shape, dtype):
+    M, N, K = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M + N + K))
+    x = jax.random.normal(k1, (M, K), dtype)
+    w = jax.random.normal(k2, (K, N), dtype)
+    y = ops.matmul(x, w, tiles=(64, 128, 128), interpret=True)
+    yr = ref.matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert y.shape == (M, N)
+    assert _rel_err(y.astype(jnp.float32), yr.astype(jnp.float32)) < tol
+
+
+@pytest.mark.parametrize("tiles", MM_TILES)
+def test_matmul_tile_invariance(tiles):
+    """Property: the result must not depend on the tile choice."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (96, 160), jnp.float32)
+    w = jax.random.normal(k2, (160, 192), jnp.float32)
+    y0 = ops.matmul(x, w, tiles=(96, 192, 160), interpret=True)
+    y1 = ops.matmul(x, w, tiles=tiles, interpret=True)
+    assert _rel_err(y1, y0) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 96), n=st.integers(1, 160), k=st.integers(1, 128),
+       bm=st.sampled_from([8, 16, 32, 64]),
+       bn=st.sampled_from([128, 256]),
+       bk=st.sampled_from([128, 256]))
+def test_matmul_property(m, n, k, bm, bn, bk):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + n * 3 + k))
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    y = ops.matmul(x, w, tiles=(bm, bn, bk), interpret=True)
+    assert y.shape == (m, n)
+    assert _rel_err(y, ref.matmul_ref(x, w)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("tiles", [(64, 128), (128, 128)])
+def test_flash_attention(causal, hq, hkv, tiles):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, hq, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, hkv, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, hkv, 256, 64))
+    y = ops.flash_attention(q, k, v, causal=causal, scale=0.125,
+                            tiles=tiles, interpret=True)
+    rep = hq // hkv
+    yr = ref.attention_ref(q, jnp.repeat(k, rep, 1), jnp.repeat(v, rep, 1),
+                           causal=causal, scale=0.125)
+    assert float(jnp.max(jnp.abs(y - yr))) < 2e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.sampled_from([64, 128, 256]), d=st.sampled_from([32, 64]),
+       bq=st.sampled_from([32, 64]), bkv=st.sampled_from([64, 128]),
+       causal=st.booleans())
+def test_flash_property(sq, d, bq, bkv, causal):
+    key = jax.random.PRNGKey(sq + d)
+    q = jax.random.normal(key, (1, 2, sq, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, sq, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, sq, d))
+    y = ops.flash_attention(q, k, v, causal=causal, scale=d ** -0.5,
+                            tiles=(bq, bkv), interpret=True)
+    yr = ref.attention_ref(q, k, v, causal=causal, scale=d ** -0.5)
+    assert float(jnp.max(jnp.abs(y - yr))) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# chunk scan (SSD)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [16, 32, 128])
+def test_chunk_scan(chunk):
+    key = jax.random.PRNGKey(1)
+    G, S, P, N = 3, 128, 32, 16
+    x = jax.random.normal(key, (G, S, P))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (G, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 2), (G, S, N)) * 0.3
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                            (G, S)))
+    y = ops.chunk_scan(x, Bm, Cm, la, chunk=chunk, interpret=True)
+    yr = ref.chunk_scan_ref(x, Bm, Cm, la)
+    assert _rel_err(y, yr) < 1e-4
+
+
+def test_chunk_scan_chunk_invariance():
+    """Chunk size is a pure performance knob — results must agree."""
+    key = jax.random.PRNGKey(2)
+    G, S, P, N = 2, 64, 16, 8
+    x = jax.random.normal(key, (G, S, P))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (G, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 2), (G, S, N)) * 0.3
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                            (G, S)))
+    outs = [ops.chunk_scan(x, Bm, Cm, la, chunk=c, interpret=True)
+            for c in (8, 16, 64)]
+    for o in outs[1:]:
+        assert _rel_err(o, outs[0]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# the XLA flash path (custom VJP) vs oracle — gradients included
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_mem_efficient_attention_grads(causal):
+    from repro.models import compute
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 4, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 128, 32))
+
+    def fn(q, k, v):
+        return compute.flash_attention(q, k, v, site="t", causal=causal,
+                                       q_chunk=32, kv_chunk=64).sum()
+
+    def naive(q, k, v):
+        ke, ve = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        return ref.attention_ref(q, ke, ve, causal=causal,
+                                 scale=32 ** -0.5).sum()
+
+    g1 = jax.grad(fn, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-4

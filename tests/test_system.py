@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the paper's system: the full
+extract -> train-RL -> tune -> inject -> run pipeline, plus the training
+and serving drivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import dataset
+from repro.core.agents import PPOAgent, brute_force_action
+from repro.core.env import CostModelEnv
+from repro.core.extractor import extract_arch_sites, extract_sites
+from repro.core.vectorizer import TileProgram, inject, program_speedup, tune
+from repro.models import compute
+from repro.models.lm import build_model
+
+NV = NeuroVecConfig(train_batch=256, sgd_minibatch=64, ppo_epochs=4)
+
+
+def test_end_to_end_vectorization_pipeline():
+    """The paper's Fig. 3 loop: extract loops -> embed -> RL tune ->
+    inject pragmas -> the tuned program is faster under the cost model and
+    numerically identical when executed."""
+    env = CostModelEnv(NV)
+    # 1. extract kernel sites from a real model step ("loop extractor")
+    sites = extract_arch_sites("stablelm_3b", batch=4, seq=512)
+    assert sites, "extractor found no tunable sites"
+
+    # 2. train the agent on the synthetic corpus (paper §3.2)
+    corpus = dataset.generate(400, seed=0, base=sites)
+    agent = PPOAgent(NV, lr=5e-4, seed=0)
+    agent.train(corpus, env, total_steps=2500)
+
+    # 3. tune the extracted sites (greedy inference — paper §4.2)
+    prog = tune(sites, agent, env.space)
+    sp = program_speedup(prog, sites)
+    assert sp > 1.0, f"tuned program slower than baseline: {sp}"
+
+    # 4. inject: model math must be unchanged by the tiles
+    cfg = get_config("stablelm_3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "targets": jnp.ones((2, 16), jnp.int32)}
+    loss_xla, _ = model.train_loss(params, batch)
+    small_sites = extract_sites(
+        lambda p, b: model.train_loss(p, b)[0],
+        jax.eval_shape(model.init, jax.random.PRNGKey(0)), batch)
+    small_prog = tune(small_sites, agent, env.space)
+    with inject(small_prog, interpret=True):
+        loss_tuned, _ = model.train_loss(params, batch)
+    np.testing.assert_allclose(float(loss_tuned), float(loss_xla),
+                               rtol=5e-3)
+
+
+def test_rl_close_to_brute_force():
+    """Paper §4: RL within a few percent of brute force on held-out sites
+    (we assert within 60% extra cost at this tiny training budget; the
+    benchmark harness trains longer and reports the headline gap)."""
+    env = CostModelEnv(NV)
+    train = dataset.generate(600, seed=7)
+    test = dataset.generate(40, seed=8)
+    agent = PPOAgent(NV, lr=5e-4, seed=0)
+    agent.train(train, env, total_steps=4000)
+    a_rl = agent.act(test, sample=False)
+    t_rl = 0.0
+    for s, a in zip(test, a_rl):
+        c = env.cost(s, a)
+        t_rl += c if c is not None else 10 * brute_force_action(env, s)[1]
+    t_bf = sum(brute_force_action(env, s)[1] for s in test)
+    assert t_rl <= 1.6 * t_bf, (t_rl, t_bf)
+
+
+def test_train_driver_runs_and_loss_decreases(tmp_path):
+    from repro.launch import train as train_mod
+    losses = train_mod.main(["--arch", "stablelm_3b", "--steps", "30",
+                             "--batch", "8", "--seq", "64",
+                             "--lr", "1e-3"])
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_serve_driver_generates():
+    from repro.launch import serve as serve_mod
+    seq = serve_mod.main(["--arch", "stablelm_3b", "--batch", "2",
+                          "--prompt-len", "8", "--gen", "4"])
+    assert seq.shape == (2, 4)
+    assert bool(jnp.all(seq >= 0))
+
+
+def test_serve_driver_ssm_and_encdec():
+    from repro.launch import serve as serve_mod
+    for arch in ("xlstm_1_3b", "seamless_m4t_medium", "jamba_v0_1_52b"):
+        seq = serve_mod.main(["--arch", arch, "--batch", "2",
+                              "--prompt-len", "8", "--gen", "3"])
+        assert seq.shape == (2, 3), arch
