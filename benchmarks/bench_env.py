@@ -1,0 +1,144 @@
+"""Microbenchmark for the cost-model engine: env rewards/s, brute-force
+labels/s, PPO train steps/s — vectorized vs the scalar (seed) reference
+path.  Writes ``BENCH_env.json`` so the perf trajectory is tracked from
+this PR onward.
+
+Methodology: both paths are compile/cache-warmed first, then timed over
+``REPS`` interleaved repetitions (median), which cancels slow drift in
+shared-container load.  The scalar reference is the seed implementation:
+per-call Python cost model with baseline recomputation
+(``CostModelEnv(vectorized=False)``), interpreted factor-product brute
+force, and the un-fused PPO update (``PPOAgent(fused=False)``: jitted
+grads, Python-side Adam, per-call featurization).
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_env`` (env
+``BENCH_FAST=1`` trims budgets; ``BENCH_ENV_OUT`` overrides the output
+path).
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import dataset
+from repro.core.agents import PPOAgent, brute_force_labels
+from repro.core.env import CostModelEnv
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_ENV_OUT", "BENCH_env.json")
+REPS = 3 if FAST else 5
+
+NV = NeuroVecConfig(train_batch=256, sgd_minibatch=64, ppo_epochs=4)
+
+N_REWARD_SITES = 512 if FAST else 2048
+N_BRUTE_SITES = 64 if FAST else 256
+PPO_STEPS = 512 if FAST else 1024
+PPO_CORPUS = 400
+
+
+def _median_times(fn_a, fn_b, reps=REPS):
+    """Interleaved A/B timing (cancels slow container-load drift)."""
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
+
+
+def _scalar_brute_labels(env, sites):
+    """The seed implementation: interpreted walk of the factor product."""
+    out = []
+    for s in sites:
+        best_a, best_c = (0, 0, 0), float("inf")
+        for a in itertools.product(
+                *(range(n) for n in env.space.valid_sizes(s.kind))):
+            c = env.cost(s, a)
+            if c is not None and c < best_c:
+                best_a, best_c = a, c
+        out.append(best_a)
+    return np.array(out, np.int32)
+
+
+def bench_rewards(env_vec, env_scl):
+    sites = dataset.generate(N_REWARD_SITES, seed=0)
+    rng = np.random.default_rng(0)
+    actions = np.stack([[rng.integers(0, n)
+                         for n in env_vec.space.valid_sizes(s.kind)]
+                        for s in sites])
+    # warm both paths (fills the vectorized env's baseline cache so the
+    # steady-state — what training actually sees — is measured)
+    r_v = env_vec.rewards_batch(sites, actions)
+    r_s = env_scl.rewards_batch(sites, actions)
+    assert np.allclose(r_v, r_s, rtol=1e-6, atol=1e-7), "parity violated"
+    t_v, t_s = _median_times(lambda: env_vec.rewards_batch(sites, actions),
+                             lambda: env_scl.rewards_batch(sites, actions))
+    return {"n_rewards": len(sites),
+            "scalar_rewards_per_s": len(sites) / t_s,
+            "vectorized_rewards_per_s": len(sites) / t_v,
+            "speedup": t_s / t_v}
+
+
+def bench_brute(env_vec, env_scl):
+    sites = dataset.generate(N_BRUTE_SITES, seed=1)
+    lab_v = brute_force_labels(env_vec, sites)          # warm grids
+    lab_s = _scalar_brute_labels(env_scl, sites)
+    assert (lab_v == lab_s).all(), "brute-force parity violated"
+    t_v, t_s = _median_times(lambda: brute_force_labels(env_vec, sites),
+                             lambda: _scalar_brute_labels(env_scl, sites),
+                             reps=min(REPS, 3))
+    return {"n_sites": len(sites),
+            "scalar_labels_per_s": len(sites) / t_s,
+            "vectorized_labels_per_s": len(sites) / t_v,
+            "speedup": t_s / t_v}
+
+
+def bench_ppo(env_vec, env_scl):
+    sites = dataset.generate(PPO_CORPUS, seed=2)
+    agent_v = PPOAgent(NV, lr=5e-4, seed=0)
+    agent_s = PPOAgent(NV, lr=5e-4, seed=0, fused=False)
+    # compile/cache warmup: one full update on each path
+    agent_v.train(sites, env_vec, total_steps=NV.train_batch)
+    agent_s.train(sites, env_scl, total_steps=NV.train_batch)
+    t_v, t_s = _median_times(
+        lambda: agent_v.train(sites, env_vec, total_steps=PPO_STEPS),
+        lambda: agent_s.train(sites, env_scl, total_steps=PPO_STEPS))
+    return {"train_steps": PPO_STEPS,
+            "scalar_steps_per_s": PPO_STEPS / t_s,
+            "vectorized_steps_per_s": PPO_STEPS / t_v,
+            "scalar_s": t_s, "vectorized_s": t_v,
+            "speedup": t_s / t_v}
+
+
+def run() -> dict:
+    env_vec = CostModelEnv(NV, vectorized=True)
+    env_scl = CostModelEnv(NV, vectorized=False)
+    results = {
+        "config": {"train_batch": NV.train_batch,
+                   "sgd_minibatch": NV.sgd_minibatch,
+                   "ppo_epochs": NV.ppo_epochs,
+                   "fast": FAST, "reps": REPS},
+        "env_rewards": bench_rewards(env_vec, env_scl),
+        "brute_force_labels": bench_brute(env_vec, env_scl),
+        "ppo_train": bench_ppo(env_vec, env_scl),
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    for k in ("env_rewards", "brute_force_labels", "ppo_train"):
+        print(f"bench_env,{k}_speedup,{results[k]['speedup']:.2f}")
+    print(f"bench_env,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -10,9 +10,10 @@ import time
 
 def main() -> None:
     sys.path.insert(0, "src")
-    from benchmarks import figures, kernelbench, roofline
+    from benchmarks import bench_env, figures, kernelbench, roofline
 
     jobs = {
+        "bench_env": bench_env.run,
         "fig1": figures.fig1_dotprod_sweep,
         "fig2": figures.fig2_suite_bruteforce,
         "fig5": figures.fig5_hyperparam_sweep,

@@ -37,6 +37,10 @@ class NeuroVecConfig:
     # --- environment (reward eq. 2, §3.4 penalty) ---
     fail_penalty: float = -9.0      # VMEM overflow == compile timeout
     reward_noise: float = 0.0       # measurement-noise injection for tests
+    strict_actions: bool = False    # raise on out-of-range action indices
+                                    # instead of clamping (debug mode; also
+                                    # REPRO_STRICT_ACTIONS=1 /
+                                    # env.set_strict_actions)
 
     # --- dataset (§3.2) ---
     n_synthetic: int = 10_000       # generated corpus size

@@ -1,33 +1,53 @@
 """Brute-force search over the full factor space (the paper's oracle and
-the label source for the supervised methods, §3.5)."""
+the label source for the supervised methods, §3.5).
+
+The search is a single argmin over the vectorized cost tensor from
+:mod:`repro.core.costmodel_vec` — no interpreted factor-product walk.  Flat
+action order matches the old ``itertools.product`` enumeration, so argmin
+tie-breaking is identical to the scalar implementation.
+"""
 from __future__ import annotations
 
-import itertools
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
+from repro.core import costmodel_vec
 from repro.core.env import CostModelEnv
 from repro.models.compute import KernelSite
 
 
 def brute_force_action(env: CostModelEnv, site: KernelSite
                        ) -> Tuple[Tuple[int, int, int], float]:
-    """Exhaustive argmin of cost.  Returns (action_indices, best_cost)."""
-    sizes = env.space.valid_sizes(site.kind)
-    best_a, best_c = (0, 0, 0), float("inf")
-    for a in itertools.product(*(range(s) for s in sizes)):
-        c = env.cost(site, a)
-        if c is not None and c < best_c:
-            best_a, best_c = a, c
-    return best_a, best_c
+    """Exhaustive argmin of cost.  Returns (action_indices, best_cost);
+    best_cost is ``inf`` when every tile is VMEM-illegal."""
+    grid = costmodel_vec.cost_grid_kind(env.space, [site], site.kind)[0]
+    flat = int(np.argmin(grid))
+    return env.space.unflatten(site.kind, flat), float(grid[flat])
 
 
 def brute_force_labels(env: CostModelEnv, sites: List[KernelSite]
                        ) -> np.ndarray:
-    """(n_sites, 3) optimal action indices — brute-force labels."""
-    return np.array([brute_force_action(env, s)[0] for s in sites],
-                    np.int32)
+    """(n_sites, 3) optimal action indices — brute-force labels.
+
+    One vectorized cost-grid evaluation + argmin per site kind."""
+    out = np.zeros((len(sites), 3), np.int32)
+    for kind, idx in costmodel_vec.group_by_kind(sites).items():
+        grid = costmodel_vec.cost_grid_kind(
+            env.space, [sites[i] for i in idx], kind)
+        out[idx] = env.space.unflatten_batch(kind, grid.argmin(1))
+    return out
+
+
+def brute_force_costs(env: CostModelEnv, sites: List[KernelSite]
+                      ) -> np.ndarray:
+    """(n_sites,) best achievable cost per site (the oracle's runtime)."""
+    out = np.empty((len(sites),), np.float64)
+    for kind, idx in costmodel_vec.group_by_kind(sites).items():
+        grid = costmodel_vec.cost_grid_kind(
+            env.space, [sites[i] for i in idx], kind)
+        out[idx] = grid.min(1)
+    return out
 
 
 def n_evaluations(env: CostModelEnv, sites) -> int:

@@ -21,10 +21,8 @@ class NNSAgent:
         q = self._norm(self.embed_fn(sites))
         sims = q @ self.keys.T                        # (B, n_train) cosine
         # restrict to same-kind neighbors (different kinds have different
-        # action semantics)
-        out = []
-        for i, s in enumerate(sites):
-            m = self.train_kinds == s.kind
-            row = np.where(m, sims[i], -np.inf)
-            out.append(self.labels[int(row.argmax())])
-        return np.array(out, np.int64)
+        # action semantics) — one vectorized mask+argmax, no Python loop
+        kinds = np.array([s.kind for s in sites])
+        match = kinds[:, None] == self.train_kinds[None, :]
+        nn = np.where(match, sims, -np.inf).argmax(1)
+        return np.asarray(self.labels, np.int64)[nn]

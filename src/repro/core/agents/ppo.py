@@ -82,9 +82,11 @@ def _head_logits(nv: NeuroVecConfig, head_sizes, out, valid_sizes):
 
 
 def policy_forward(params, nv, head_sizes, contexts, mask, valid_sizes,
-                   mode: str):
-    """-> (per-head logits or (mu, logstd), value)."""
-    code = emb.embed_sites(params["embedder"], contexts, mask)
+                   mode: str, fast_embed: bool = True):
+    """-> (per-head logits or (mu, logstd), value).  ``fast_embed=False``
+    uses the seed's un-factored embedder (benchmark reference path)."""
+    embed = emb.embed_sites if fast_embed else emb.embed_sites_ref
+    code = embed(params["embedder"], contexts, mask)
     h = jnp.tanh(_mlp(params["trunk"], code))
     out = _mlp(params["pi"], h)
     v = _mlp(params["vf"], h)[:, 0]
@@ -188,6 +190,9 @@ class PPOAgent:
     mode: str = "discrete"       # discrete | cont1 | cont2 | two_agents
     seed: int = 0
     lr: Optional[float] = None
+    fused: bool = True           # fully-jitted update (Adam + minibatch scan
+                                 # inside jit); False = legacy per-minibatch
+                                 # path, kept as the benchmark reference
 
     def __post_init__(self):
         self.space = ActionSpace(self.nv)
@@ -199,19 +204,30 @@ class PPOAgent:
         self.history: List[dict] = []
         self._key = jax.random.fold_in(key, 777)
         self._jit_sample = jax.jit(self._sample_impl)
-        self._jit_update = jax.jit(self._update_impl)
+        self._jit_greedy = jax.jit(self._greedy_impl)
+        self._jit_epoch = jax.jit(self._epoch_impl)
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_grads = jax.jit(self._grads_impl)
+        # incremented inside the impls, i.e. only when jax (re)traces them —
+        # regression-tested so the greedy path can't silently start
+        # re-tracing per call again
+        self.trace_counts = {"sample": 0, "greedy": 0, "epoch": 0, "step": 0}
+        self.last_minibatch_count = 0
 
     # -- featurization ----------------------------------------------------
     def feats(self, sites):
-        ctx, mask = emb.featurize_batch(sites)
+        # the legacy (fused=False) reference path recomputes features every
+        # call, matching the original implementation
+        ctx, mask = emb.featurize_batch(sites, cache=self.fused)
         vs = np.array([self.space.valid_sizes(s.kind) for s in sites],
                       np.int32)
         return jnp.asarray(ctx), jnp.asarray(mask), jnp.asarray(vs)
 
     # -- acting -----------------------------------------------------------
     def _sample_impl(self, params, key, ctx, mask, vs):
+        self.trace_counts["sample"] += 1
         out, v = policy_forward(params, self.nv, self.head_sizes, ctx, mask,
-                                vs, self.mode)
+                                vs, self.mode, fast_embed=self.fused)
         if self.mode in ("discrete", "two_agents"):
             a, logp, _ = sample_discrete(key, out)
             return a, a.astype(jnp.float32), logp, v
@@ -219,68 +235,157 @@ class PPOAgent:
         a = _cont_decode(self.nv, self.head_sizes, raw, vs, self.mode)
         return a, raw, logp, v
 
-    def act(self, sites, sample: bool = True):
-        ctx, mask, vs = self.feats(sites)
+    def _greedy_impl(self, params, ctx, mask, vs):
+        self.trace_counts["greedy"] += 1
+        out, _ = policy_forward(params, self.nv, self.head_sizes, ctx, mask,
+                                vs, self.mode, fast_embed=self.fused)
+        if self.mode in ("discrete", "two_agents"):
+            return jnp.stack([lg.argmax(-1) for lg in out], -1)
+        n = 1 if self.mode == "cont1" else 3
+        return _cont_decode(self.nv, self.head_sizes, out[:, :n], vs,
+                            self.mode)
+
+    def act(self, sites, sample: bool = True, feats=None):
+        ctx, mask, vs = feats if feats is not None else self.feats(sites)
         if sample:
             self._key, k = jax.random.split(self._key)
             a, raw, logp, v = self._jit_sample(self.params, k, ctx, mask, vs)
             return (np.asarray(a), np.asarray(raw), np.asarray(logp),
                     np.asarray(v))
-        # greedy (deployment/inference — paper §4.2)
-        out, v = jax.jit(policy_forward, static_argnums=(1, 2, 6))(
-            self.params, self.nv, self.head_sizes, ctx, mask, vs, self.mode)
-        if self.mode in ("discrete", "two_agents"):
-            a = jnp.stack([lg.argmax(-1) for lg in out], -1)
-        else:
-            n = 1 if self.mode == "cont1" else 3
-            a = _cont_decode(self.nv, self.head_sizes, out[:, :n], vs,
-                             self.mode)
-        return np.asarray(a)
+        # greedy (deployment/inference — paper §4.2); jit cached across calls
+        return np.asarray(self._jit_greedy(self.params, ctx, mask, vs))
 
     # -- PPO update ---------------------------------------------------------
-    def _update_impl(self, params, ctx, mask, vs, actions, raw, old_logp,
-                     rewards):
-        def loss_fn(p):
-            out, v = policy_forward(p, self.nv, self.head_sizes, ctx, mask,
-                                    vs, self.mode)
-            if self.mode in ("discrete", "two_agents"):
-                logp, ent = logp_discrete(out, actions)
-            else:
-                logp, ent = logp_continuous(out, raw, self.mode,
-                                            len(self.head_sizes))
-            adv = rewards - jax.lax.stop_gradient(v)
-            adv = (adv - adv.mean()) / (adv.std() + 1e-6)
-            ratio = jnp.exp(logp - old_logp)
-            clipped = jnp.clip(ratio, 1 - self.nv.clip, 1 + self.nv.clip)
-            pg = -jnp.minimum(ratio * adv, clipped * adv).mean()
-            vloss = ((v - rewards) ** 2).mean()
-            loss = (pg + self.nv.value_coef * vloss
-                    - self.nv.entropy_coef * ent.mean())
-            return loss, (pg, vloss)
+    def _loss_fn(self, p, ctx, mask, vs, actions, raw, old_logp, rewards):
+        out, v = policy_forward(p, self.nv, self.head_sizes, ctx, mask,
+                                vs, self.mode, fast_embed=self.fused)
+        if self.mode in ("discrete", "two_agents"):
+            logp, ent = logp_discrete(out, actions)
+        else:
+            logp, ent = logp_continuous(out, raw, self.mode,
+                                        len(self.head_sizes))
+        adv = rewards - jax.lax.stop_gradient(v)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+        ratio = jnp.exp(logp - old_logp)
+        clipped = jnp.clip(ratio, 1 - self.nv.clip, 1 + self.nv.clip)
+        pg = -jnp.minimum(ratio * adv, clipped * adv).mean()
+        vloss = ((v - rewards) ** 2).mean()
+        loss = (pg + self.nv.value_coef * vloss
+                - self.nv.entropy_coef * ent.mean())
+        return loss, (pg, vloss)
 
-        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    def _grads_impl(self, params, ctx, mask, vs, actions, raw, old_logp,
+                    rewards):
+        """Legacy: loss+grads only; Adam runs un-jitted outside."""
+        (loss, _), grads = jax.value_and_grad(
+            self._loss_fn, has_aux=True)(params, ctx, mask, vs, actions,
+                                         raw, old_logp, rewards)
         return loss, grads
 
-    def update(self, sites, actions, raw, old_logp, rewards):
-        ctx, mask, vs = self.feats(sites)
+    def _step_impl(self, params, opt, ctx, mask, vs, actions, raw, old_logp,
+                   rewards):
+        """One fused minibatch step: grads + Adam move inside the jit."""
+        self.trace_counts["step"] += 1
+        (loss, _), grads = jax.value_and_grad(
+            self._loss_fn, has_aux=True)(params, ctx, mask, vs, actions,
+                                         raw, old_logp, rewards)
+        params, opt = adam_update(params, grads, opt, self._lr)
+        return params, opt, loss
+
+    def _epoch_impl(self, params, opt, ctx, mask, vs, actions, raw,
+                    old_logp, rewards, idx_mat):
+        """A stack of minibatches via lax.scan — a single device dispatch.
+        ``idx_mat``: (n_minibatches, mb) int indices.  Minibatch rows are
+        gathered once up front (one fused gather instead of a dynamic
+        gather per scan step) and the scan is moderately unrolled — both
+        are significant wins on the XLA CPU backend."""
+        self.trace_counts["epoch"] += 1
+        data = (ctx[idx_mat], mask[idx_mat], vs[idx_mat], actions[idx_mat],
+                raw[idx_mat], old_logp[idx_mat], rewards[idx_mat])
+
+        def body(carry, xs):
+            params, opt = carry
+            (loss, _), grads = jax.value_and_grad(
+                self._loss_fn, has_aux=True)(params, *xs)
+            params, opt = adam_update(params, grads, opt, self._lr)
+            return (params, opt), loss
+
+        (params, opt), losses = jax.lax.scan(
+            body, (params, opt), data,
+            unroll=min(4, int(idx_mat.shape[0])))
+        return params, opt, losses
+
+    def update(self, sites, actions, raw, old_logp, rewards, feats=None):
+        ctx, mask, vs = feats if feats is not None else self.feats(sites)
         actions = jnp.asarray(actions)
         raw = jnp.asarray(raw)
         old_logp = jnp.asarray(old_logp)
         rewards = jnp.asarray(rewards, jnp.float32)
         n = len(sites)
         mb = min(self.nv.sgd_minibatch, n)
+        if not self.fused:
+            return self._update_legacy(ctx, mask, vs, actions, raw,
+                                       old_logp, rewards, n, mb)
+        n_full, rem = divmod(n, mb)
         losses = []
+        self.last_minibatch_count = 0
+        params, opt = self.params, self.opt
+        if rem == 0:
+            # no tail: every epoch is full minibatches, so the whole update
+            # (all epochs x minibatches, epoch-major order) is ONE device
+            # dispatch — a single lax.scan over the stacked permutations
+            keys = jax.random.split(self._key, self.nv.ppo_epochs + 1)
+            self._key = keys[0]
+            idx_mat = jnp.concatenate(
+                [jax.random.permutation(k, n).reshape(n_full, mb)
+                 for k in keys[1:]])
+            params, opt, ls = self._jit_epoch(
+                params, opt, ctx, mask, vs, actions, raw, old_logp, rewards,
+                idx_mat)
+            losses.append(ls)
+            self.last_minibatch_count = self.nv.ppo_epochs * n_full
+        else:
+            for _ in range(self.nv.ppo_epochs):
+                self._key, k = jax.random.split(self._key)
+                perm = jax.random.permutation(k, n)
+                idx_mat = perm[:n_full * mb].reshape(n_full, mb)
+                params, opt, ls = self._jit_epoch(
+                    params, opt, ctx, mask, vs, actions, raw, old_logp,
+                    rewards, idx_mat)
+                losses.append(ls)
+                self.last_minibatch_count += n_full
+                # the tail minibatch: the remainder samples are trained on
+                # too (the legacy path silently dropped them)
+                sl = perm[n_full * mb:]
+                params, opt, loss = self._jit_step(
+                    params, opt, ctx[sl], mask[sl], vs[sl], actions[sl],
+                    raw[sl], old_logp[sl], rewards[sl])
+                losses.append(loss[None])
+                self.last_minibatch_count += 1
+        self.params, self.opt = params, opt
+        # returned lazily (0-d jax array): jax's async dispatch then overlaps
+        # this update's device work with the next batch's host-side
+        # featurization/rewards; callers needing a float can float() it
+        return jnp.mean(jnp.concatenate(losses))
+
+    def _update_legacy(self, ctx, mask, vs, actions, raw, old_logp, rewards,
+                       n, mb):
+        """The original (seed) update loop: jitted grads, Python-side Adam,
+        tail minibatch dropped.  Reference path for ``benchmarks/bench_env``."""
+        losses = []
+        self.last_minibatch_count = 0
         for _ in range(self.nv.ppo_epochs):
             self._key, k = jax.random.split(self._key)
             perm = np.asarray(jax.random.permutation(k, n))
             for i in range(0, n - mb + 1, mb):
                 sl = perm[i:i + mb]
-                loss, grads = self._jit_update(
+                loss, grads = self._jit_grads(
                     self.params, ctx[sl], mask[sl], vs[sl], actions[sl],
                     raw[sl], old_logp[sl], rewards[sl])
                 self.params, self.opt = adam_update(
                     self.params, grads, self.opt, self._lr)
                 losses.append(float(loss))
+                self.last_minibatch_count += 1
         return float(np.mean(losses))
 
     # -- training loop (contextual bandit) ---------------------------------
@@ -290,17 +395,31 @@ class PPOAgent:
         batch = batch or self.nv.train_batch
         rng = np.random.default_rng(rng_seed)
         steps = 0
+        first = len(self.history)
         while steps < total_steps:
             idx = rng.integers(0, len(sites), size=min(batch,
                                                        total_steps - steps))
             batch_sites = [sites[i] for i in idx]
-            a, raw, logp, v = self.act(batch_sites)
+            feats = self.feats(batch_sites)       # featurize once per batch
+            if self.fused:
+                # keep raw/logp on device (only the actions need numpy for
+                # the env); with the lazy update loss this lets the host
+                # featurize/reward the next batch while XLA still runs the
+                # previous update
+                self._key, k = jax.random.split(self._key)
+                a, raw, logp, v = self._jit_sample(self.params, k, *feats)
+                a = np.asarray(a)
+            else:
+                a, raw, logp, v = self.act(batch_sites, feats=feats)
             rewards = env.rewards_batch(batch_sites, a)
-            loss = self.update(batch_sites, a, raw, logp, rewards)
+            loss = self.update(batch_sites, a, raw, logp, rewards,
+                               feats=feats)
             steps += len(batch_sites)
             self.history.append({"steps": steps,
                                  "reward_mean": float(rewards.mean()),
                                  "loss": loss})
+        for h in self.history[first:]:            # one sync at the end
+            h["loss"] = float(h["loss"])
         return self.history
 
     # -- embedding for downstream supervised methods (paper §3.5) ----------

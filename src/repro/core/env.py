@@ -8,18 +8,40 @@ Reward = (t_baseline − t_action) / t_baseline                       (eq. 2)
          with the −9 penalty for VMEM-overflow tiles (§3.4's compile
          timeout).  On TPU hardware the cost model is swapped for wall-clock
          measurement of the compiled kernel (``MeasuredEnv`` hook).
+
+Perf architecture: baselines are pure functions of the site, so the
+environment keeps a per-site baseline-cost cache (keyed by ``site.key()``)
+and every batched entry point — :meth:`CostModelEnv.rewards_batch`,
+:meth:`costs_batch`, :meth:`cost_grid` — routes through the vectorized
+engine in :mod:`repro.core.costmodel_vec` instead of the scalar per-call
+model.  Construct with ``vectorized=False`` to get the original scalar
+loops (kept as the reference path for parity tests and benchmarks).
 """
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.neurovec import NeuroVecConfig
 from repro.core import costmodel
+from repro.core import costmodel_vec
 from repro.models.compute import KernelSite
+
+# Global strict-action toggle: when on, out-of-range action indices raise
+# instead of being clamped, so head-masking bugs can't hide behind the
+# clamp.  Enable per-call (``tiles(..., strict=True)``), per-config
+# (``NeuroVecConfig.strict_actions``), process-wide via this switch, or
+# with ``REPRO_STRICT_ACTIONS=1`` in the environment.
+_STRICT_ACTIONS = os.environ.get("REPRO_STRICT_ACTIONS", "0") == "1"
+
+
+def set_strict_actions(on: bool) -> None:
+    global _STRICT_ACTIONS
+    _STRICT_ACTIONS = bool(on)
 
 
 @dataclass(frozen=True)
@@ -48,8 +70,20 @@ class ActionSpace:
     def valid_sizes(self, kind: str) -> Tuple[int, int, int]:
         return tuple(len(x) for x in self.choices(kind))
 
-    def tiles(self, kind: str, action: Sequence[int]) -> Tuple[int, ...]:
+    def strict_enabled(self, strict: Optional[bool]) -> bool:
+        if strict is not None:
+            return strict
+        return _STRICT_ACTIONS or getattr(self.cfg, "strict_actions", False)
+
+    def tiles(self, kind: str, action: Sequence[int],
+              strict: Optional[bool] = None) -> Tuple[int, ...]:
         ch = self.choices(kind)
+        if self.strict_enabled(strict):
+            for d in range(3):
+                if not 0 <= int(action[d]) < len(ch[d]):
+                    raise IndexError(
+                        f"action index {int(action[d])} out of range "
+                        f"[0, {len(ch[d])}) for head {d} of kind {kind!r}")
         return tuple(ch[d][min(int(action[d]), len(ch[d]) - 1)]
                      for d in range(3))
 
@@ -60,14 +94,55 @@ class ActionSpace:
         s = self.valid_sizes(kind)
         return (flat // (s[1] * s[2]), (flat // s[2]) % s[1], flat % s[2])
 
+    def unflatten_batch(self, kind: str, flat: np.ndarray) -> np.ndarray:
+        """(n,) flat actions -> (n, 3) head indices (vectorized)."""
+        s = self.valid_sizes(kind)
+        flat = np.asarray(flat, np.int64)
+        return np.stack([flat // (s[1] * s[2]),
+                         (flat // s[2]) % s[1],
+                         flat % s[2]], -1)
+
 
 class CostModelEnv:
-    """Reward oracle backed by the analytic TPU cost model."""
+    """Reward oracle backed by the analytic TPU cost model.
 
-    def __init__(self, nv_cfg: NeuroVecConfig, seed: int = 0):
+    ``vectorized=True`` (default) uses the batched engine with a per-site
+    baseline cache; ``vectorized=False`` reproduces the original scalar
+    per-call loops (the reference path for parity tests and benchmarks).
+    """
+
+    def __init__(self, nv_cfg: NeuroVecConfig, seed: int = 0,
+                 vectorized: bool = True):
         self.cfg = nv_cfg
         self.space = ActionSpace(nv_cfg)
+        self.vectorized = vectorized
         self._rng = np.random.default_rng(seed)
+        self._baseline_cache: Dict[str, float] = {}
+
+    # -- baseline cache ----------------------------------------------------
+    def baseline_cost(self, site: KernelSite) -> float:
+        """Cached ``costmodel.baseline_cost`` (pure function of the site)."""
+        key = site.key()
+        c = self._baseline_cache.get(key)
+        if c is None:
+            c = costmodel.baseline_cost(site)
+            self._baseline_cache[key] = c
+        return c
+
+    def baseline_costs(self, sites: Sequence[KernelSite]) -> np.ndarray:
+        """(n,) baseline costs; fills the cache for unseen sites in one
+        vectorized evaluation."""
+        keys = [s.key() for s in sites]
+        missing = [i for i, k in enumerate(keys)
+                   if k not in self._baseline_cache]
+        if missing:
+            fresh = costmodel_vec.baseline_costs([sites[i] for i in missing])
+            for i, c in zip(missing, fresh):
+                self._baseline_cache[keys[i]] = float(c)
+        return np.array([self._baseline_cache[k] for k in keys], np.float64)
+
+    def clear_baseline_cache(self) -> None:
+        self._baseline_cache.clear()
 
     # -- the paper's eq. 2 --
     def reward(self, site: KernelSite, action: Sequence[int]) -> float:
@@ -75,7 +150,10 @@ class CostModelEnv:
         t = costmodel.site_cost(site, tiles)
         if t is None:
             return float(self.cfg.fail_penalty)
-        t_base = costmodel.baseline_cost(site)
+        # the scalar reference path recomputes the baseline per call,
+        # faithful to the original implementation (what bench_env measures)
+        t_base = (self.baseline_cost(site) if self.vectorized
+                  else costmodel.baseline_cost(site))
         if self.cfg.reward_noise > 0:
             t *= float(np.exp(self._rng.normal(0, self.cfg.reward_noise)))
         return float((t_base - t) / t_base)
@@ -86,11 +164,53 @@ class CostModelEnv:
     def speedup(self, site: KernelSite, action: Sequence[int]) -> float:
         """t_baseline / t_action (clamped to the penalty semantics)."""
         t = self.cost(site, action)
-        t_base = costmodel.baseline_cost(site)
+        t_base = (self.baseline_cost(site) if self.vectorized
+                  else costmodel.baseline_cost(site))
         if t is None:
             return 0.1                  # illegal: 10x slower, as the penalty
         return float(t_base / t)
 
+    # -- batched fast paths -------------------------------------------------
+    def costs_batch(self, sites, actions) -> np.ndarray:
+        """(n,) per-site cost of the chosen actions; ``inf`` = illegal."""
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        if not self.vectorized:
+            return np.array([c if (c := self.cost(s, a)) is not None
+                             else np.inf for s, a in zip(sites, actions)],
+                            np.float64)
+        return costmodel_vec.costs_for_actions(self.space, sites, actions)
+
     def rewards_batch(self, sites, actions) -> np.ndarray:
-        return np.array([self.reward(s, a) for s, a in zip(sites, actions)],
-                        np.float32)
+        if not self.vectorized:
+            return np.array([self.reward(s, a)
+                             for s, a in zip(sites, actions)], np.float32)
+        if not len(sites):
+            return np.zeros((0,), np.float32)
+        t = costmodel_vec.costs_for_actions(self.space, sites, actions)
+        t_base = self.baseline_costs(sites)
+        if self.cfg.reward_noise > 0:
+            # draw only for legal entries, in site order — the same RNG
+            # stream as the scalar path (which returns the penalty before
+            # drawing), so seeded runs agree across both paths
+            legal = np.isfinite(t)
+            t = t.copy()
+            t[legal] *= np.exp(self._rng.normal(
+                0, self.cfg.reward_noise, size=int(legal.sum())))
+        r = np.where(np.isfinite(t), (t_base - t) / t_base,
+                     float(self.cfg.fail_penalty))
+        return r.astype(np.float32)
+
+    def speedups_batch(self, sites, actions) -> np.ndarray:
+        """(n,) t_baseline / t_action with the 0.1x illegal clamp."""
+        t = self.costs_batch(sites, actions)
+        if self.vectorized:
+            t_base = self.baseline_costs(sites)
+        else:                     # faithful scalar reference: recompute
+            t_base = np.array([costmodel.baseline_cost(s) for s in sites])
+        return np.where(np.isfinite(t), t_base / np.maximum(t, 1e-300), 0.1)
+
+    def cost_grid(self, sites) -> np.ndarray:
+        """(n_sites, max_n_actions) full action-grid cost tensor (``inf``
+        for illegal tiles and for padding past a kind's action count)."""
+        return costmodel_vec.cost_grid(self.space, sites)

@@ -107,9 +107,15 @@ class KernelSite:
     fused_ops: int = 0       # elementwise ops fused at the site (bias/act)
 
     def key(self) -> str:
-        return (f"{self.kind}:{self.site}:m{self.m}n{self.n}k{self.k}"
-                f"b{self.batch}:{self.dtype}:{self.transpose}"
-                f"{':c' if self.causal else ''}:f{self.fused_ops}")
+        # memoized: key() sits on the batched-oracle hot path (baseline
+        # cache, TileProgram lookups) and the dataclass is frozen
+        k = self.__dict__.get("_key")
+        if k is None:
+            k = (f"{self.kind}:{self.site}:m{self.m}n{self.n}k{self.k}"
+                 f"b{self.batch}:{self.dtype}:{self.transpose}"
+                 f"{':c' if self.causal else ''}:f{self.fused_ops}")
+            object.__setattr__(self, "_key", k)
+        return k
 
 
 class SiteRecorder:

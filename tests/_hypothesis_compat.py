@@ -1,0 +1,79 @@
+"""Minimal stand-in for ``hypothesis`` so tier-1 runs on a bare env.
+
+``tests/test_core.py`` property-tests the cost model with
+``@given(st.integers(...))``.  When the real ``hypothesis`` package is
+installed (see ``requirements-dev.txt``) it is used; when it is missing we
+fall back to this shim, which replays each property over a deterministic
+seeded sweep instead of skipping the test outright (the graceful
+degradation requested for bare environments — strictly better than
+``pytest.importorskip``, which would skip the whole module).
+
+Only the tiny API surface the test suite uses is provided:
+``given`` (kwargs of strategies), ``settings(max_examples=, deadline=)``,
+and ``st.integers(min_value, max_value)``.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_FALLBACK_EXAMPLES = 25
+
+
+class _IntStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+class _ChoiceStrategy:
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng: random.Random):
+        return rng.choice(self.options)
+
+
+def integers(min_value: int, max_value: int) -> _IntStrategy:
+    return _IntStrategy(min_value, max_value)
+
+
+def sampled_from(options) -> _ChoiceStrategy:
+    return _ChoiceStrategy(options)
+
+
+def booleans() -> _ChoiceStrategy:
+    return _ChoiceStrategy([False, True])
+
+
+st = SimpleNamespace(integers=integers, sampled_from=sampled_from,
+                     booleans=booleans)
+
+
+def settings(max_examples=None, **_kw):
+    """Caps the fallback sweep at ``max_examples`` (tests tuned down for
+    expensive bodies keep their budget); other hypothesis knobs ignored."""
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            rng = random.Random(0xC0FFEE)
+            n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            for _ in range(n):
+                fn(**{k: s.sample(rng) for k, s in strategies.items()})
+        # pytest must see a zero-arg test, not the wrapped signature —
+        # otherwise the strategy kwargs are mistaken for fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

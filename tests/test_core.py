@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                   # property-based when available ...
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # ... deterministic sweep on bare envs
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs.neurovec import NeuroVecConfig
 from repro.core import costmodel, dataset
