@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.configs.neurovec import NeuroVecConfig
 from repro.core import dataset
-from repro.core.agents import PPOAgent, brute_force_labels
+from repro.api import PPOAgent, brute_force_labels
 from repro.core.env import CostModelEnv
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"

@@ -1,4 +1,9 @@
-"""Shared benchmark plumbing: one trained agent reused across figures."""
+"""Shared benchmark plumbing: one trained agent reused across figures.
+
+Every decision method is constructed through the ``repro.api`` registry
+(``make_agent``) and scored through the batched Oracle surface — no
+ad-hoc per-site loops or duck-typed policy callables.
+"""
 from __future__ import annotations
 
 import os
@@ -6,12 +11,9 @@ import time
 
 import numpy as np
 
-from repro.configs.neurovec import NeuroVecConfig
+from repro.api import (CostModelEnv, NeuroVecConfig, brute_force_labels,
+                       make_agent)
 from repro.core import dataset
-from repro.core.agents import (DecisionTreeAgent, NNSAgent, PPOAgent,
-                               RandomAgent, brute_force_action,
-                               brute_force_labels, polly_action)
-from repro.core.env import CostModelEnv
 
 # benchmark-wide config: paper defaults except a batch small enough for the
 # single-core container; FAST=1 trims budgets for CI-style runs
@@ -38,11 +40,11 @@ def corpus():
 
 
 def trained_agent(mode: str = "discrete", lr: float = 5e-4,
-                  steps: int = None, seed: int = 0) -> PPOAgent:
+                  steps: int = None, seed: int = 0):
     key = ("agent", mode, lr, steps, seed)
     if key not in _cache:
-        agent = PPOAgent(NV, mode=mode, lr=lr, seed=seed)
-        agent.train(corpus(), env(), total_steps=steps or TRAIN_STEPS)
+        agent = make_agent("ppo", NV, seed=seed, mode=mode, lr=lr)
+        agent.fit(corpus(), env(), total_steps=steps or TRAIN_STEPS)
         _cache[key] = agent
     return _cache[key]
 
@@ -55,60 +57,49 @@ def labeled_subset():
     return _cache["labels"]
 
 
-def workload_time(wl, act_fn) -> float:
-    """Total modelled runtime of a workload under a policy; fixed_frac of
-    the baseline total is untunable (whole-program measurement, Fig. 8/9)."""
+def workload_time(wl, agent):
+    """Total modelled runtime of a workload under an agent; fixed_frac of
+    the baseline total is untunable (whole-program measurement, Fig. 8/9).
+    One batched oracle evaluation per workload."""
     e = env()
-    from repro.core import costmodel
-    t_base_sites = sum(costmodel.baseline_cost(s) for s in wl.sites)
-    t_base_total = t_base_sites / max(1e-12, (1 - wl.fixed_frac))
+    sites = list(wl.sites)
+    t_base = e.baseline_costs(sites)
+    t_base_total = float(t_base.sum()) / max(1e-12, (1 - wl.fixed_frac))
     fixed = t_base_total * wl.fixed_frac
-    actions = act_fn(list(wl.sites))
-    t = fixed
-    for s, a in zip(wl.sites, actions):
-        c = e.cost(s, a)
-        t += c if c is not None else 10 * costmodel.baseline_cost(s)
-    return t, t_base_total
+    actions = np.asarray(agent.act(sites, sample=False))
+    c = e.costs_batch(sites, actions)
+    c = np.where(np.isfinite(c), c, float(NV.illegal_slowdown) * t_base)
+    return fixed + float(c.sum()), t_base_total
 
 
-def suite_speedups(workloads, act_fn):
+def suite_speedups(workloads, agent):
     out = []
     for wl in workloads:
-        t, t_base = workload_time(wl, act_fn)
+        t, t_base = workload_time(wl, agent)
         out.append(t_base / t)
     return np.array(out)
 
 
 def policies_for_fig7():
-    """All policies in the paper's Fig. 7, as act(sites) callables."""
+    """All policies in the paper's Fig. 7, as fitted protocol Agents."""
     e = env()
-    agent = trained_agent()
+    ppo = trained_agent()
     sites_l, labels = labeled_subset()
-    nns = NNSAgent(agent.code_vectors, sites_l, labels)
-    dtree = DecisionTreeAgent(agent.code_vectors, e.space, sites_l, labels)
-    rand = RandomAgent(e.space, seed=0)
+    nns = make_agent("nns", NV, seed=0,
+                     embed_fn=ppo.code_vectors).fit(sites_l, e,
+                                                    labels=labels)
+    dtree = make_agent("dtree", NV, seed=0,
+                       embed_fn=ppo.code_vectors).fit(sites_l, e,
+                                                      labels=labels)
     return {
-        "baseline": lambda ss: [_baseline_action(e, s) for s in ss],
-        "random": rand.act,
-        "polly": lambda ss: [polly_action(e.space, s) for s in ss],
-        "nns": nns.act,
-        "dtree": dtree.act,
-        "rl": lambda ss: agent.act(ss, sample=False),
-        "brute": lambda ss: [brute_force_action(e, s)[0] for s in ss],
+        "baseline": make_agent("baseline", NV).fit([], e),
+        "random": make_agent("random", NV, seed=0).fit([], e),
+        "polly": make_agent("polly", NV).fit([], e),
+        "nns": nns,
+        "dtree": dtree,
+        "rl": ppo,
+        "brute": make_agent("brute", NV).fit([], e),
     }
-
-
-def _baseline_action(e, s):
-    from repro.core import costmodel
-    base = costmodel.baseline_tiles(s)
-    ch = e.space.choices(s.kind)
-    a = []
-    for d in range(3):
-        opts = list(ch[d])
-        tgt = base[d] if d < len(base) else opts[0]
-        a.append(opts.index(tgt) if tgt in opts
-                 else int(np.argmin([abs(o - tgt) for o in opts])))
-    return a
 
 
 def timed(fn, *args, n=3):

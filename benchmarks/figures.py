@@ -1,16 +1,16 @@
 """One function per paper table/figure (DESIGN.md §9 index).
 
 Each returns a list of CSV rows ``name,value,derived`` and prints them.
+All decision methods come from the ``repro.api`` registry and the factor
+sweeps (fig1/fig2) are single ``cost_grid`` tensor evaluations.
 """
 from __future__ import annotations
-
-import itertools
 
 import numpy as np
 
 from benchmarks import common
-from repro.core import costmodel, dataset
-from repro.core.agents import PPOAgent, brute_force_action
+from repro.api import make_agent, n_evaluations
+from repro.core import dataset
 from repro.models.compute import KernelSite
 
 
@@ -27,23 +27,26 @@ def _emit(rows):
 def fig1_dotprod_sweep():
     """Paper: brute-force VF x IF grid on the dot-product kernel; 26/35
     factor choices beat the baseline cost model, best ~1.2x.  Ours: the
-    (bm, bk) grid of the reduction-shaped site."""
+    (bm, bk) grid of the reduction-shaped site — one ``cost_grid`` slice,
+    no per-action env calls."""
     e = common.env()
     site = KernelSite(site="fig1.dot", kind="matmul", m=8, n=128, k=4096)
-    t_base = costmodel.baseline_cost(site)
+    t_base = float(e.baseline_costs([site])[0])
+    sizes = e.space.valid_sizes("matmul")
+    cube = e.cost_grid([site])[0][:e.space.n_actions("matmul")]
+    cube = cube.reshape(sizes)                    # (bm, bn, bk) axes
     rows = [("fig1", "factor", "speedup_vs_baseline")]
     better = total = 0
     best = 0.0
-    for a0, a2 in itertools.product(range(len(common.NV.bm_choices)),
-                                    range(len(common.NV.bk_choices))):
-        a = (a0, 0, a2)
-        c = e.cost(site, a)
-        sp = 0.0 if c is None else t_base / c
-        tiles = e.space.tiles("matmul", a)
-        rows.append(("fig1", f"bm{tiles[0]}_bk{tiles[2]}", round(sp, 4)))
-        total += 1
-        better += sp > 1.0
-        best = max(best, sp)
+    for a0 in range(sizes[0]):
+        for a2 in range(sizes[2]):
+            c = cube[a0, 0, a2]
+            sp = 0.0 if not np.isfinite(c) else t_base / float(c)
+            tiles = e.space.tiles("matmul", (a0, 0, a2))
+            rows.append(("fig1", f"bm{tiles[0]}_bk{tiles[2]}", round(sp, 4)))
+            total += 1
+            better += sp > 1.0
+            best = max(best, sp)
     rows.append(("fig1.summary", f"{better}/{total}_beat_baseline",
                  round(best, 4)))
     return _emit(rows)
@@ -56,13 +59,13 @@ def fig1_dotprod_sweep():
 def fig2_suite_bruteforce():
     e = common.env()
     sites = dataset.arch_sites()
+    # the whole sweep is one cost-grid tensor + a row-wise min
+    best = e.cost_grid(sites).min(1)
+    sps = e.baseline_costs(sites) / best
     rows = [("fig2", "site", "bruteforce_speedup")]
-    sps = []
-    for s in sites:
-        a, c = brute_force_action(e, s)
-        sp = costmodel.baseline_cost(s) / c
-        sps.append(sp)
-        rows.append(("fig2", f"{s.site}:{s.m}x{s.n}x{s.k}", round(sp, 4)))
+    for s, sp in zip(sites, sps):
+        rows.append(("fig2", f"{s.site}:{s.m}x{s.n}x{s.k}",
+                     round(float(sp), 4)))
     rows.append(("fig2.summary", "geomean",
                  round(float(np.exp(np.mean(np.log(sps)))), 4)))
     rows.append(("fig2.summary", "all_geq_1",
@@ -91,9 +94,9 @@ def fig5_hyperparam_sweep(steps=None):
         if "hidden" in kw:
             import dataclasses
             nv = dataclasses.replace(nv, hidden=kw["hidden"])
-        agent = PPOAgent(nv, lr=kw.get("lr", nv.lr), seed=0)
-        agent.train(corpus, e, total_steps=steps,
-                    batch=kw.get("batch", nv.train_batch))
+        agent = make_agent("ppo", nv, seed=0, lr=kw.get("lr", nv.lr))
+        agent.fit(corpus, e, total_steps=steps,
+                  batch=kw.get("batch", nv.train_batch))
         for h in agent.history[:: max(1, len(agent.history) // 6)]:
             rows.append(("fig5", f"{name}@{h['steps']}",
                          f"{h['reward_mean']:.4f}|{h['loss']:.4f}"))
@@ -109,8 +112,8 @@ def fig6_action_spaces(steps=None):
     rows = [("fig6", "action_space@steps", "reward_mean")]
     finals = {}
     for mode in ("discrete", "cont1", "cont2"):
-        agent = PPOAgent(common.NV, mode=mode, lr=5e-4, seed=0)
-        agent.train(common.corpus(), common.env(), total_steps=steps)
+        agent = make_agent("ppo", common.NV, seed=0, mode=mode, lr=5e-4)
+        agent.fit(common.corpus(), common.env(), total_steps=steps)
         for h in agent.history[:: max(1, len(agent.history) // 5)]:
             rows.append(("fig6", f"{mode}@{h['steps']}",
                          round(h["reward_mean"], 4)))
@@ -130,8 +133,8 @@ def fig7_benchmarks():
     wls = dataset.twelve_benchmarks()
     rows = [("fig7", "benchmark|policy", "speedup_vs_baseline")]
     summary = {}
-    for name, act in pol.items():
-        sps = common.suite_speedups(wls, act)
+    for name, agent in pol.items():
+        sps = common.suite_speedups(wls, agent)
         for wl, sp in zip(wls, sps):
             rows.append(("fig7", f"{wl.name}|{name}", round(float(sp), 4)))
         summary[name] = float(np.exp(np.mean(np.log(np.maximum(sps,
@@ -140,7 +143,6 @@ def fig7_benchmarks():
         rows.append(("fig7.summary", f"geomean_{name}", round(g, 4)))
     # the paper's sample-efficiency claim: brute force needs ~35x more
     # compile+run evaluations than the RL training budget
-    from repro.core.agents.brute import n_evaluations
     n_bf = n_evaluations(common.env(), common.corpus())
     rows.append(("fig7.summary", "bruteforce_vs_rl_samples",
                  round(n_bf / common.TRAIN_STEPS, 2)))

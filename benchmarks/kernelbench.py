@@ -4,15 +4,8 @@ reports the COST-MODEL projection for the TPU target alongside — the
 before/after evidence for the tile choices themselves)."""
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks import common
-from repro.core import costmodel
-from repro.core.agents import brute_force_action
+from repro.api import brute_force_action
 from repro.models.compute import KernelSite
 
 
@@ -28,9 +21,9 @@ def run():
                    batch=64, causal=True),
     ]
     for s in sites:
-        t_base = costmodel.baseline_cost(s)
+        t_base = e.baseline_cost(s)
         a_rl = agent.act([s], sample=False)[0]
-        t_rl = e.cost(s, a_rl) or 10 * t_base
+        t_rl = e.cost(s, a_rl) or common.NV.illegal_slowdown * t_base
         _, t_bf = brute_force_action(e, s)
         rows.append(("kernelbench", f"{s.site}|baseline",
                      round(t_base * 1e6, 2)))

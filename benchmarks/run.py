@@ -1,11 +1,31 @@
 """Benchmark entry point — one function per paper table/figure.
 
 Prints ``name,key,value`` CSV.  ``BENCH_FAST=1`` trims training budgets.
-Usage: PYTHONPATH=src python -m benchmarks.run [fig1 fig2 ... roofline]
+Usage: PYTHONPATH=src python -m benchmarks.run [fig1 fig2 ... facade]
 """
-import os
 import sys
 import time
+
+
+def facade_smoke():
+    """End-to-end ``repro.api.NeuroVectorizer`` drive: every registered
+    agent fits against the shared oracle and tunes the same site set —
+    the smoke row for the unified Agent/Oracle protocol."""
+    from benchmarks import common
+    from repro.api import AGENT_NAMES, NeuroVectorizer
+    from repro.core import dataset
+
+    sites = dataset.generate(50, seed=0)
+    rows = [("facade", "agent", "program_speedup")]
+    for name in AGENT_NAMES:
+        nv = NeuroVectorizer(common.NV, agent=name, oracle=common.env(),
+                             seed=0)
+        nv.fit(sites, **({"total_steps": 1000} if name == "ppo" else {}))
+        prog = nv.tune_sites(sites)
+        rows.append(("facade", name, round(nv.speedup(prog, sites), 4)))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows
 
 
 def main() -> None:
@@ -14,6 +34,7 @@ def main() -> None:
 
     jobs = {
         "bench_env": bench_env.run,
+        "facade": facade_smoke,
         "fig1": figures.fig1_dotprod_sweep,
         "fig2": figures.fig2_suite_bruteforce,
         "fig5": figures.fig5_hyperparam_sweep,

@@ -1,5 +1,6 @@
 """End-to-end driver: train a small LM for a few hundred steps with the
-NeuroVectorizer-tuned kernels injected (the deployment mode of §4.2).
+NeuroVectorizer-tuned kernels injected (the deployment mode of §4.2),
+tuned through the ``repro.api`` facade.
 
     PYTHONPATH=src python examples/autotune_and_train.py [--steps 300]
 
@@ -17,28 +18,27 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--agent", default="ppo",
+                    help="any repro.api registry name (ppo, brute, ...)")
     ap.add_argument("--rl-steps", type=int, default=4000)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
 
-    from repro.configs.neurovec import NeuroVecConfig
+    from repro.api import NeuroVecConfig, NeuroVectorizer, extract_arch_sites
     from repro.core import dataset
-    from repro.core.agents import PPOAgent
-    from repro.core.env import CostModelEnv
-    from repro.core.extractor import extract_arch_sites
-    from repro.core.vectorizer import tune
     from repro.launch import train as train_mod
 
     print("== tune ==")
-    nv = NeuroVecConfig(train_batch=500, sgd_minibatch=125, ppo_epochs=6)
-    env = CostModelEnv(nv)
+    cfg = NeuroVecConfig(train_batch=500, sgd_minibatch=125, ppo_epochs=6)
+    nv = NeuroVectorizer(cfg, agent=args.agent, seed=0,
+                         **({"lr": 5e-4} if args.agent == "ppo" else {}))
     sites = extract_arch_sites(args.arch, batch=8, seq=2048)
-    agent = PPOAgent(nv, lr=5e-4, seed=0)
-    agent.train(dataset.generate(1200, seed=0, base=sites), env,
-                total_steps=args.rl_steps)
-    prog = tune(sites, agent, env.space)
+    fit_kw = ({"total_steps": args.rl_steps} if args.agent == "ppo" else {})
+    nv.fit(dataset.generate(1200, seed=0, base=sites), **fit_kw)
+    prog = nv.tune_sites(sites)
     prog.save("/tmp/repro_tiles.json")
-    print(f"saved TileProgram with {len(prog.tiles)} sites")
+    print(f"saved TileProgram with {len(prog.tiles)} sites "
+          f"(modelled speedup {nv.speedup(prog, sites):.2f}x)")
 
     print("== train with tuned kernels + checkpoint/restart ==")
     losses = train_mod.main([

@@ -1,6 +1,7 @@
 """Serving with the production substrate: batched KV-cache decode, straggler
-monitoring, graceful preemption, and an elastic re-plan after a simulated
-chip failure.
+monitoring, graceful preemption, an elastic re-plan after a simulated
+chip failure — and a NeuroVectorizer tile plan for the serving kernels via
+the ``repro.api`` facade.
 
     PYTHONPATH=src python examples/fault_tolerant_serving.py
 """
@@ -11,6 +12,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.api import NeuroVectorizer, extract_sites
 from repro.configs import get_config
 from repro.ft.monitor import StepMonitor, plan_elastic_mesh
 from repro.models.lm import build_model
@@ -30,6 +32,13 @@ def main():
     cache = model.make_cache(B, ctx, jnp.dtype(cfg.dtype))
     prefill = jax.jit(make_prefill_step(model))
     serve = jax.jit(make_serve_step(model), donate_argnums=(3,))
+
+    print("== tile plan for the serving step (repro.api facade) ==")
+    sites = extract_sites(make_prefill_step(model), params, batch, cache)
+    nv = NeuroVectorizer(agent="brute")       # exhaustive: few serve sites
+    prog = nv.fit(sites).tune_sites(sites)
+    print(f"  {len(prog.tiles)} sites tuned; modelled speedup "
+          f"{nv.speedup(prog, sites):.2f}x (inject on TPU via nv.inject)")
 
     print("== batched decode with straggler monitoring ==")
     mon = StepMonitor(warmup=3, z_thresh=3.0)

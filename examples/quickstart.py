@@ -1,6 +1,7 @@
-"""Quickstart: the NeuroVectorizer loop in miniature (paper Fig. 3).
+"""Quickstart: the NeuroVectorizer loop in miniature (paper Fig. 3),
+driven entirely through the ``repro.api`` facade.
 
-Extract kernel sites from a model -> train the PPO bandit on a synthetic
+Extract kernel sites from a model -> fit the PPO bandit on a synthetic
 corpus -> tune the sites -> inject the tile program -> verify the tuned
 kernels compute the same numbers and the modelled TPU time improved.
 
@@ -12,22 +13,16 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.configs.neurovec import NeuroVecConfig
+from repro.api import NeuroVectorizer, NeuroVecConfig, extract_arch_sites
 from repro.core import dataset
-from repro.core.agents import PPOAgent
-from repro.core.env import CostModelEnv
-from repro.core.extractor import extract_arch_sites
-from repro.core.vectorizer import inject, program_speedup, tune
 from repro.models import compute
-from repro.models.lm import build_model
+from repro.models.compute import KernelSite
 
 
 def main():
-    nv = NeuroVecConfig(train_batch=500, sgd_minibatch=125, ppo_epochs=6)
-    env = CostModelEnv(nv)
+    cfg = NeuroVecConfig(train_batch=500, sgd_minibatch=125, ppo_epochs=6)
+    nv = NeuroVectorizer(cfg, agent="ppo", lr=5e-4, seed=0)
 
     print("== 1. extract kernel sites (the 'loop extractor') ==")
     sites = extract_arch_sites("qwen3_8b", batch=8, seq=2048)
@@ -35,27 +30,26 @@ def main():
         print("  ", s.key())
     print(f"  ... {len(sites)} sites total")
 
-    print("== 2. train the deep-RL agent on a synthetic corpus ==")
+    print("== 2. fit the deep-RL agent on a synthetic corpus ==")
     corpus = dataset.generate(1500, seed=0, base=sites)
-    agent = PPOAgent(nv, lr=5e-4, seed=0)
-    hist = agent.train(corpus, env, total_steps=5000)
+    nv.fit(corpus, total_steps=5000)
+    hist = nv.agent.history
     print(f"  reward mean: {hist[0]['reward_mean']:+.3f} -> "
           f"{hist[-1]['reward_mean']:+.3f}  (positive = beats baseline)")
 
     print("== 3. tune the extracted sites (inference mode) ==")
-    prog = tune(sites, agent, env.space)
-    sp = program_speedup(prog, sites)
+    prog = nv.tune_sites(sites)
+    sp = nv.speedup(prog, sites)
     print(f"  modelled speedup over heuristic baseline: {sp:.2f}x")
 
     print("== 4. inject: same math through tuned Pallas kernels ==")
     x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
     w = jax.random.normal(jax.random.PRNGKey(1), (256, 512))
-    from repro.models.compute import KernelSite
     site = KernelSite(site="demo", kind="matmul", m=128, n=512, k=256,
                       dtype="float32")
-    demo_prog = tune([site], agent, env.space)
+    demo_prog = nv.tune_sites([site])
     y_ref = compute.matmul(x, w, site="demo")
-    with inject(demo_prog, interpret=True):
+    with nv.inject(demo_prog, interpret=True):
         y_tuned = compute.matmul(x, w, site="demo")
     err = float(jnp.max(jnp.abs(y_tuned - y_ref)))
     print(f"  tiles={demo_prog.tiles[site.key()]}  max |diff| = {err:.2e}")

@@ -1,0 +1,118 @@
+"""``repro.api`` — the single public surface of the NeuroVectorizer
+reproduction (paper Fig. 3/4: *end-to-end, code to vectorization*).
+
+One facade drives the whole pipeline with interchangeable decision
+methods behind the :class:`Agent` protocol and interchangeable reward
+sources behind the :class:`Oracle` protocol::
+
+    from repro.api import NeuroVectorizer
+
+    nv = NeuroVectorizer(cfg, agent="ppo", lr=5e-4, seed=0)
+    nv.fit(corpus_sites, total_steps=30_000)     # train vs the oracle
+    prog = nv.tune(step_fn, abstract_args)       # extract -> act -> tiles
+    print(nv.speedup(prog, sites))               # modelled speedup
+    with nv.inject(prog):                        # tuned Pallas BlockSpecs
+        step_fn(*real_args)
+
+Swap ``agent="ppo"`` for any registry name (``dtree`` / ``nns`` /
+``brute`` / ``random`` / ``polly`` / ``baseline``) and the rest of the
+code does not change; swap the default cost-model oracle for
+``oracle=MeasuredEnv(cfg, measure_fn=...)`` and rewards come from
+hardware timings instead of the analytic model — same protocol, same
+facade.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+from repro.configs.neurovec import DEFAULT, NeuroVecConfig
+from repro.core.agents import (AGENT_NAMES, BaselineHeuristicAgent,
+                               BruteForceAgent, DecisionTreeAgent, NNSAgent,
+                               PPOAgent, PollyAgent, RandomAgent,
+                               brute_force_action, brute_force_costs,
+                               brute_force_labels, default_embed_fn,
+                               make_agent, n_evaluations, polly_action)
+from repro.core.env import (ActionSpace, CostModelEnv, MeasuredEnv,
+                            set_strict_actions)
+from repro.core.extractor import extract_arch_sites, extract_sites
+from repro.core.protocols import Agent, Oracle
+from repro.core.vectorizer import (TileProgram, baseline_program, inject,
+                                   program_speedup, tune, tune_step_fn)
+
+__all__ = [
+    "NeuroVectorizer", "Agent", "Oracle", "AGENT_NAMES", "make_agent",
+    "default_embed_fn",
+    "NeuroVecConfig", "DEFAULT", "ActionSpace", "CostModelEnv",
+    "MeasuredEnv", "set_strict_actions",
+    "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
+    "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
+    "brute_force_action", "brute_force_labels", "brute_force_costs",
+    "n_evaluations", "polly_action",
+    "TileProgram", "baseline_program", "inject", "program_speedup",
+    "tune", "tune_step_fn", "extract_sites", "extract_arch_sites",
+]
+
+
+class NeuroVectorizer:
+    """The end-to-end facade: extract → fit → tune → inject.
+
+    Parameters
+    ----------
+    cfg:    the :class:`NeuroVecConfig` (action space, PPO and penalty
+            hyperparameters).
+    agent:  a registry name (``"ppo"``, ``"brute"``, ...) or an already
+            constructed :class:`Agent`.  Extra ``agent_kwargs`` flow to
+            ``make_agent`` (e.g. ``lr=``, ``mode=``, ``embed_fn=``).
+    oracle: the reward source; defaults to the analytic
+            :class:`CostModelEnv`.  Pass a :class:`MeasuredEnv` to tune
+            against hardware timings.
+    """
+
+    def __init__(self, cfg: NeuroVecConfig = DEFAULT,
+                 agent: Union[str, Agent] = "ppo",
+                 oracle: Optional[Oracle] = None, seed: int = 0,
+                 **agent_kwargs):
+        self.cfg = cfg
+        self.oracle: Oracle = (oracle if oracle is not None
+                               else CostModelEnv(cfg, seed=seed))
+        self.agent: Agent = (make_agent(agent, cfg, seed=seed,
+                                        **agent_kwargs)
+                             if isinstance(agent, str) else agent)
+
+    # -- training ----------------------------------------------------------
+    def fit(self, corpus_sites: Sequence, **fit_kwargs) -> "NeuroVectorizer":
+        """Fit the agent against this facade's oracle (RL training, brute
+        labelling, or a no-op for search-free methods).  Extra kwargs flow
+        to the agent (e.g. ``total_steps=`` for ppo, ``labels=`` for
+        nns/dtree)."""
+        self.agent.fit(corpus_sites, self.oracle, **fit_kwargs)
+        return self
+
+    # -- tuning ------------------------------------------------------------
+    def tune(self, step_fn, abstract_args: Sequence = ()) -> TileProgram:
+        """Extract kernel sites from ``step_fn`` traced over
+        ``abstract_args`` and tune them (greedy inference, paper §4.2)."""
+        return self.tune_sites(extract_sites(step_fn, *abstract_args))
+
+    def tune_sites(self, sites: Sequence) -> TileProgram:
+        return tune(list(sites), self.agent, self.oracle.space)
+
+    def tune_arch(self, arch: str, batch: int = 8,
+                  seq: int = 2048) -> TileProgram:
+        """Tune every site of one training step of a named architecture."""
+        return self.tune_sites(extract_arch_sites(arch, batch=batch,
+                                                  seq=seq))
+
+    # -- deployment --------------------------------------------------------
+    def inject(self, program: TileProgram, interpret: bool = False):
+        """Context manager: run model code with the tuned tiles routed
+        through the Pallas kernels (the pragma-injection analogue)."""
+        return inject(program, interpret=interpret)
+
+    def baseline(self, sites: Sequence) -> TileProgram:
+        return baseline_program(list(sites))
+
+    def speedup(self, program: TileProgram, sites: Sequence) -> float:
+        """Aggregate speedup of ``program`` over the heuristic baseline,
+        priced by this facade's oracle semantics."""
+        return program_speedup(program, list(sites), env=self.oracle)

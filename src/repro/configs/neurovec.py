@@ -36,6 +36,11 @@ class NeuroVecConfig:
 
     # --- environment (reward eq. 2, §3.4 penalty) ---
     fail_penalty: float = -9.0      # VMEM overflow == compile timeout
+    illegal_slowdown: float = 10.0  # an illegal tile "runs" this many times
+                                    # slower than baseline: speedup clamps to
+                                    # 1/illegal_slowdown and program-level
+                                    # scoring charges illegal_slowdown*t_base
+                                    # (one constant for env + vectorizer)
     reward_noise: float = 0.0       # measurement-noise injection for tests
     strict_actions: bool = False    # raise on out-of-range action indices
                                     # instead of clamping (debug mode; also

@@ -1,9 +1,85 @@
-from repro.core.agents.ppo import PPOAgent
-from repro.core.agents.brute import brute_force_action, brute_force_labels
-from repro.core.agents.random_search import RandomAgent
-from repro.core.agents.nns import NNSAgent
-from repro.core.agents.dtree import DecisionTreeAgent
-from repro.core.agents.polly import polly_action
+"""The decision methods of paper §3.5, all behind one Agent protocol and a
+string-keyed registry.
 
-__all__ = ["PPOAgent", "brute_force_action", "brute_force_labels",
-           "RandomAgent", "NNSAgent", "DecisionTreeAgent", "polly_action"]
+``make_agent(name, cfg, seed=...)`` constructs any of the seven methods —
+``ppo`` (deep RL), ``dtree``/``nns`` (supervised on brute-force labels),
+``brute`` (exhaustive oracle), ``random``, ``polly`` (mem-only heuristic)
+and ``baseline`` (the fixed LLVM-cost-model stand-in).  Every agent
+satisfies :class:`repro.core.protocols.Agent` —
+``fit(sites, oracle) -> self`` and ``act(sites, sample=False) -> (n, 3)``
+— and is exercised by the shared contract test in ``tests/test_api.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.neurovec import DEFAULT, NeuroVecConfig
+from repro.core.agents.baseline import BaselineHeuristicAgent
+from repro.core.agents.brute import (BruteForceAgent, brute_force_action,
+                                     brute_force_costs, brute_force_labels,
+                                     n_evaluations)
+from repro.core.agents.dtree import DecisionTreeAgent
+from repro.core.agents.nns import NNSAgent
+from repro.core.agents.polly import PollyAgent, polly_action
+from repro.core.agents.ppo import PPOAgent
+from repro.core.agents.random_search import RandomAgent
+from repro.core.env import ActionSpace
+
+AGENT_NAMES = ("ppo", "dtree", "nns", "brute", "random", "polly",
+               "baseline")
+
+
+def default_embed_fn(seed: int = 0):
+    """A frozen randomly-initialized code2vec embedder — the stand-in used
+    by ``nns``/``dtree`` when no trained embedding generator is supplied
+    (random projections preserve the shape-feature geometry well enough
+    for the supervised methods; pass ``embed_fn=ppo.code_vectors`` for the
+    paper's frozen-after-RL setup).  Sized by the module-level embedding
+    constants, not the tile config."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import embedding as emb
+
+    params = emb.embedder_init(jax.random.PRNGKey(seed))
+
+    def embed(sites):
+        ctx, mask = emb.featurize_batch(sites)
+        return np.asarray(emb.embed_sites(params, jnp.asarray(ctx),
+                                          jnp.asarray(mask)))
+
+    return embed
+
+
+def make_agent(name: str, cfg: NeuroVecConfig = DEFAULT, *, seed: int = 0,
+               **kwargs):
+    """Construct a registered agent by name.
+
+    Extra ``kwargs`` flow to the constructor (e.g. ``mode=``/``lr=`` for
+    ppo, ``embed_fn=`` for nns/dtree, ``oracle=`` for brute,
+    ``max_depth=`` for dtree)."""
+    if name == "ppo":
+        return PPOAgent(cfg, seed=seed, **kwargs)
+    if name == "dtree":
+        embed_fn = kwargs.pop("embed_fn", None) or default_embed_fn(seed)
+        return DecisionTreeAgent(embed_fn, seed=seed, **kwargs)
+    if name == "nns":
+        embed_fn = kwargs.pop("embed_fn", None) or default_embed_fn(seed)
+        return NNSAgent(embed_fn, **kwargs)
+    if name == "brute":
+        return BruteForceAgent(cfg=cfg, **kwargs)
+    if name == "random":
+        return RandomAgent(ActionSpace(cfg), seed=seed, **kwargs)
+    if name == "polly":
+        return PollyAgent(ActionSpace(cfg), **kwargs)
+    if name == "baseline":
+        return BaselineHeuristicAgent(ActionSpace(cfg), **kwargs)
+    raise ValueError(
+        f"unknown agent {name!r}; registered: {', '.join(AGENT_NAMES)}")
+
+
+__all__ = ["AGENT_NAMES", "make_agent", "default_embed_fn",
+           "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
+           "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
+           "brute_force_action", "brute_force_labels", "brute_force_costs",
+           "n_evaluations", "polly_action"]

@@ -1,0 +1,35 @@
+"""The heuristic baseline as an Agent: the stand-in for LLVM's fixed cost
+model (paper Fig. 7's 1.0x reference bar).  ``act`` maps each site's
+heuristic baseline tiles back onto the nearest action-grid indices — one
+vectorized pass per site kind."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import costmodel_vec
+
+
+class BaselineHeuristicAgent:
+    name = "baseline"
+
+    def __init__(self, space=None):
+        self.space = space
+
+    def fit(self, sites, oracle, **_) -> "BaselineHeuristicAgent":
+        if self.space is None:
+            self.space = oracle.space
+        return self
+
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        if self.space is None:
+            raise RuntimeError("BaselineHeuristicAgent.act before fit "
+                               "(no ActionSpace)")
+        tiles = costmodel_vec.baseline_tiles_batch(sites)
+        out = np.zeros((len(sites), 3), np.int64)
+        for kind, idx in costmodel_vec.group_by_kind(sites).items():
+            for d, opts in enumerate(self.space.choices(kind)):
+                opts_a = np.asarray(opts, np.int64)
+                # exact match when the tile is a choice, else nearest
+                out[idx, d] = np.abs(opts_a[None, :]
+                                     - tiles[idx, d][:, None]).argmin(1)
+        return out

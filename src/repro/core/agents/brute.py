@@ -1,10 +1,13 @@
 """Brute-force search over the full factor space (the paper's oracle and
 the label source for the supervised methods, §3.5).
 
-The search is a single argmin over the vectorized cost tensor from
-:mod:`repro.core.costmodel_vec` — no interpreted factor-product walk.  Flat
-action order matches the old ``itertools.product`` enumeration, so argmin
-tie-breaking is identical to the scalar implementation.
+The search is a single argmin over the oracle's ``cost_grid`` tensor — no
+interpreted factor-product walk, and no assumption about *which* oracle:
+the analytic :class:`~repro.core.env.CostModelEnv` and the hardware-backed
+:class:`~repro.core.env.MeasuredEnv` expose the same grid, so brute force
+exhaustively measures real kernels on TPU with the identical code path.
+Flat action order matches the old ``itertools.product`` enumeration, so
+argmin tie-breaking is identical to the scalar implementation.
 """
 from __future__ import annotations
 
@@ -13,44 +16,71 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.core import costmodel_vec
-from repro.core.env import CostModelEnv
 from repro.models.compute import KernelSite
 
 
-def brute_force_action(env: CostModelEnv, site: KernelSite
+def brute_force_action(oracle, site: KernelSite
                        ) -> Tuple[Tuple[int, int, int], float]:
     """Exhaustive argmin of cost.  Returns (action_indices, best_cost);
     best_cost is ``inf`` when every tile is VMEM-illegal."""
-    grid = costmodel_vec.cost_grid_kind(env.space, [site], site.kind)[0]
+    grid = oracle.cost_grid([site])[0]
     flat = int(np.argmin(grid))
-    return env.space.unflatten(site.kind, flat), float(grid[flat])
+    return oracle.space.unflatten(site.kind, flat), float(grid[flat])
 
 
-def brute_force_labels(env: CostModelEnv, sites: List[KernelSite]
-                       ) -> np.ndarray:
+def brute_force_labels(oracle, sites: List[KernelSite]) -> np.ndarray:
     """(n_sites, 3) optimal action indices — brute-force labels.
 
-    One vectorized cost-grid evaluation + argmin per site kind."""
+    One ``cost_grid`` evaluation + argmin per site kind."""
     out = np.zeros((len(sites), 3), np.int32)
+    if not len(sites):
+        return out
+    # row argmin over the padded grid IS the flat action (padding columns
+    # are inf and never win) — no per-kind sub-grid copies
+    flat = oracle.cost_grid(sites).argmin(1)
     for kind, idx in costmodel_vec.group_by_kind(sites).items():
-        grid = costmodel_vec.cost_grid_kind(
-            env.space, [sites[i] for i in idx], kind)
-        out[idx] = env.space.unflatten_batch(kind, grid.argmin(1))
+        out[idx] = oracle.space.unflatten_batch(kind, flat[idx])
     return out
 
 
-def brute_force_costs(env: CostModelEnv, sites: List[KernelSite]
-                      ) -> np.ndarray:
+def brute_force_costs(oracle, sites: List[KernelSite]) -> np.ndarray:
     """(n_sites,) best achievable cost per site (the oracle's runtime)."""
-    out = np.empty((len(sites),), np.float64)
-    for kind, idx in costmodel_vec.group_by_kind(sites).items():
-        grid = costmodel_vec.cost_grid_kind(
-            env.space, [sites[i] for i in idx], kind)
-        out[idx] = grid.min(1)
-    return out
+    if not len(sites):
+        return np.zeros((0,), np.float64)
+    return oracle.cost_grid(sites).min(1)
 
 
-def n_evaluations(env: CostModelEnv, sites) -> int:
+def n_evaluations(oracle, sites) -> int:
     """How many compile+run evaluations brute force costs (the paper's
     35x-more-samples claim)."""
-    return sum(env.space.n_actions(s.kind) for s in sites)
+    return sum(oracle.space.n_actions(s.kind) for s in sites)
+
+
+class BruteForceAgent:
+    """The exhaustive-search method behind the Agent protocol.
+
+    ``fit`` just captures the oracle (brute force has nothing to learn);
+    ``act`` is the cost-grid argmin.  Constructed lazily against a
+    cost-model oracle when none is supplied, so
+    ``make_agent("brute", cfg)`` works standalone."""
+
+    name = "brute"
+
+    def __init__(self, cfg=None, oracle=None):
+        self._cfg = cfg
+        self.oracle = oracle
+
+    def _ensure_oracle(self):
+        if self.oracle is None:
+            from repro.configs.neurovec import DEFAULT
+            from repro.core.env import CostModelEnv
+            self.oracle = CostModelEnv(self._cfg or DEFAULT)
+        return self.oracle
+
+    def fit(self, sites, oracle, **_) -> "BruteForceAgent":
+        self.oracle = oracle
+        return self
+
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        return brute_force_labels(self._ensure_oracle(),
+                                  sites).astype(np.int64)

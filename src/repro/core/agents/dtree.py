@@ -65,26 +65,49 @@ def _predict_one(node, x):
 
 
 class DecisionTreeAgent:
-    def __init__(self, embed_fn, space, train_sites, labels: np.ndarray,
-                 max_depth: int = 12, min_samples: int = 4, seed: int = 0):
+    """``fit(sites, oracle)`` brute-force-labels the training sites via
+    the oracle's cost grid (pass ``labels=`` to reuse precomputed ones)
+    and grows one tree per site kind."""
+
+    name = "dtree"
+
+    def __init__(self, embed_fn=None, max_depth: int = 12,
+                 min_samples: int = 4, seed: int = 0):
         self.embed_fn = embed_fn
-        self.space = space
+        self.max_depth = max_depth
+        self.min_samples = min_samples
+        self.seed = seed
+        self.space = None
         self.trees = {}
-        X = embed_fn(train_sites)
-        rng = np.random.default_rng(seed)
+
+    def fit(self, train_sites, oracle, labels=None, **_) -> "DecisionTreeAgent":
+        if self.embed_fn is None:
+            raise ValueError("DecisionTreeAgent needs an embed_fn "
+                             "(e.g. PPOAgent.code_vectors)")
+        if labels is None:
+            from repro.core.agents.brute import brute_force_labels
+            labels = brute_force_labels(oracle, train_sites)
+        labels = np.asarray(labels)
+        self.space = oracle.space
+        self.trees = {}
+        X = np.asarray(self.embed_fn(train_sites))
+        rng = np.random.default_rng(self.seed)
         kinds = sorted({s.kind for s in train_sites})
         for kind in kinds:
             idx = [i for i, s in enumerate(train_sites) if s.kind == kind]
-            sizes = space.valid_sizes(kind)
+            sizes = self.space.valid_sizes(kind)
             flat = (labels[idx, 0] * sizes[1] * sizes[2]
                     + labels[idx, 1] * sizes[2] + labels[idx, 2])
             n_classes = sizes[0] * sizes[1] * sizes[2]
             self.trees[kind] = _build(X[idx], flat.astype(np.int64),
-                                      n_classes, 0, max_depth, min_samples,
-                                      rng)
+                                      n_classes, 0, self.max_depth,
+                                      self.min_samples, rng)
+        return self
 
-    def act(self, sites):
-        X = self.embed_fn(sites)
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        if not self.trees:
+            raise RuntimeError("DecisionTreeAgent.act before fit")
+        X = np.asarray(self.embed_fn(sites))
         out = []
         for i, s in enumerate(sites):
             flat = _predict_one(self.trees[s.kind], X[i])

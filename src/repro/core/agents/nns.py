@@ -5,24 +5,45 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.agents.brute import brute_force_labels
+
 
 class NNSAgent:
-    def __init__(self, embed_fn, train_sites, labels: np.ndarray):
+    """``fit(sites, oracle)`` brute-force-labels the training sites via the
+    oracle's cost grid (pass ``labels=`` to reuse precomputed ones) and
+    freezes their embeddings; ``act`` is one vectorized cosine argmax."""
+
+    name = "nns"
+
+    def __init__(self, embed_fn=None):
         self.embed_fn = embed_fn
-        self.keys = self._norm(embed_fn(train_sites))
-        self.labels = labels
-        self.train_kinds = np.array([s.kind for s in train_sites])
+        self.keys = None
+        self.labels = None
+        self.train_kinds = None
+
+    def fit(self, sites, oracle, labels=None, **_) -> "NNSAgent":
+        if self.embed_fn is None:
+            raise ValueError("NNSAgent needs an embed_fn "
+                             "(e.g. PPOAgent.code_vectors)")
+        if labels is None:
+            labels = brute_force_labels(oracle, sites)
+        self.keys = self._norm(np.asarray(self.embed_fn(sites)))
+        self.labels = np.asarray(labels, np.int64)
+        self.train_kinds = np.array([s.kind for s in sites])
+        return self
 
     @staticmethod
     def _norm(x):
         return x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
 
-    def act(self, sites):
-        q = self._norm(self.embed_fn(sites))
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        if self.keys is None:
+            raise RuntimeError("NNSAgent.act before fit")
+        q = self._norm(np.asarray(self.embed_fn(sites)))
         sims = q @ self.keys.T                        # (B, n_train) cosine
         # restrict to same-kind neighbors (different kinds have different
         # action semantics) — one vectorized mask+argmax, no Python loop
         kinds = np.array([s.kind for s in sites])
         match = kinds[:, None] == self.train_kinds[None, :]
         nn = np.where(match, sims, -np.inf).argmax(1)
-        return np.asarray(self.labels, np.int64)[nn]
+        return self.labels[nn]

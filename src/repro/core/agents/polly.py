@@ -4,18 +4,27 @@ ISA-level vectorization heuristics; our analogue picks the tile that
 minimizes *data movement only* subject to VMEM — ignoring MXU alignment,
 pipeline overheads and dispatch cost, which is exactly the blind spot the
 RL agent exploits (paper §4: Polly beats baseline by 17%, loses to RL by
-56%)."""
+56%).
+
+The search is one vectorized mem-only cost grid per site kind (exact int64
+byte counts, so ties break identically to the scalar ``itertools.product``
+walk, which is kept below as the parity reference).
+"""
 from __future__ import annotations
 
 import itertools
 
 import numpy as np
 
-from repro.core import costmodel
+from repro.core import costmodel, costmodel_vec
 from repro.models.compute import KernelSite
+
+_ILLEGAL = np.iinfo(np.int64).max      # sentinel: never wins an argmin
 
 
 def _mem_only_cost(site: KernelSite, tiles) -> float:
+    """Scalar reference (the original per-tile walk) — parity-tested
+    against the vectorized grid."""
     s = costmodel._dtype_bytes(site.dtype)
     if site.kind == "matmul":
         M, N, K = site.m, site.n, site.k
@@ -46,7 +55,72 @@ def _mem_only_cost(site: KernelSite, tiles) -> float:
     raise ValueError(site.kind)
 
 
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def mem_only_grid_kind(space, sites, kind: str) -> np.ndarray:
+    """(n_sites, n_actions(kind)) data-movement bytes in flat-action
+    order; VMEM-illegal entries carry the int64-max sentinel.  Exact
+    integer arithmetic — identical ordering (and argmin tie-breaks) to
+    the scalar walk."""
+    tiles = costmodel_vec.action_tiles_grid(space, kind)
+    t0, t1, t2 = tiles[None, :, 0], tiles[None, :, 1], tiles[None, :, 2]
+    c = costmodel_vec._site_cols(sites)             # (n, 1) int columns
+    s = c["s"]
+    if kind == "matmul":
+        M, N, K = c["m"], c["n"], c["k"]
+        vmem = 2 * (t0 * t2 + t2 * t1) * s + t0 * t1 * 4 + t0 * t1 * s
+        tm, tn = _ceil(M, t0), _ceil(N, t1)
+        cost = (M * K * tn + K * N * tm + M * N) * s
+    elif kind == "attention":
+        Sq, Skv, D, BH = c["m"], c["k"], c["n"], c["batch"]
+        vmem = 2 * (t0 * D + 2 * t1 * D) * s + t0 * D * 4 + t0 * t1 * 4
+        tq = _ceil(Sq, t0)
+        cost = BH * (Sq * D + 2 * Skv * D * tq + Sq * D) * s
+    elif kind == "chunk_scan":
+        P, N, tokens = c["n"], c["k"], c["batch"] * c["m"]
+        vmem = 2 * t0 * (P + 2 * N) * s + P * N * 4 + t0 * t0 * 4
+        cost = tokens * (P + 2 * N) * s * 2 + _ceil(tokens, t0) * P * N * 4
+    else:
+        raise ValueError(kind)
+    cost = np.broadcast_to(cost, vmem.shape)
+    return np.where(vmem <= costmodel.VMEM_BYTES, cost, _ILLEGAL)
+
+
+class PollyAgent:
+    """Mem-only argmin behind the Agent protocol (search-free: ``fit`` is
+    a no-op that may pick up the oracle's action space)."""
+
+    name = "polly"
+
+    def __init__(self, space=None):
+        self.space = space
+
+    def fit(self, sites, oracle, **_) -> "PollyAgent":
+        if self.space is None:
+            self.space = oracle.space
+        return self
+
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        if self.space is None:
+            raise RuntimeError("PollyAgent.act before fit (no ActionSpace)")
+        out = np.zeros((len(sites), 3), np.int64)
+        for kind, idx in costmodel_vec.group_by_kind(sites).items():
+            grid = mem_only_grid_kind(self.space,
+                                      [sites[i] for i in idx], kind)
+            out[idx] = self.space.unflatten_batch(kind, grid.argmin(1))
+        return out
+
+
 def polly_action(space, site: KernelSite):
+    """Deprecated per-site shim — kept for old callers; prefer
+    ``make_agent("polly", cfg)``."""
+    return PollyAgent(space).act([site])[0]
+
+
+def _polly_action_ref(space, site: KernelSite):
+    """The original interpreted factor-product walk (parity reference)."""
     sizes = space.valid_sizes(site.kind)
     best_a, best_c = (0, 0, 0), float("inf")
     for a in itertools.product(*(range(n) for n in sizes)):

@@ -194,6 +194,8 @@ class PPOAgent:
                                  # inside jit); False = legacy per-minibatch
                                  # path, kept as the benchmark reference
 
+    name = "ppo"                 # registry key (Agent protocol)
+
     def __post_init__(self):
         self.space = ActionSpace(self.nv)
         self.head_sizes = self.space.head_sizes
@@ -245,14 +247,23 @@ class PPOAgent:
         return _cont_decode(self.nv, self.head_sizes, out[:, :n], vs,
                             self.mode)
 
-    def act(self, sites, sample: bool = True, feats=None):
+    def sample_actions(self, sites, feats=None):
+        """Stochastic draw for the PPO update: (actions, raw, logp, value)
+        as numpy arrays.  ``act(sample=True)`` is this minus the
+        training-only extras."""
         ctx, mask, vs = feats if feats is not None else self.feats(sites)
+        self._key, k = jax.random.split(self._key)
+        a, raw, logp, v = self._jit_sample(self.params, k, ctx, mask, vs)
+        return (np.asarray(a), np.asarray(raw), np.asarray(logp),
+                np.asarray(v))
+
+    def act(self, sites, *, sample: bool = False, feats=None) -> np.ndarray:
+        """(n, 3) action indices (Agent protocol).  ``sample=False`` is the
+        deterministic greedy deployment mode (paper §4.2, jit cached
+        across calls); ``sample=True`` draws from the policy."""
         if sample:
-            self._key, k = jax.random.split(self._key)
-            a, raw, logp, v = self._jit_sample(self.params, k, ctx, mask, vs)
-            return (np.asarray(a), np.asarray(raw), np.asarray(logp),
-                    np.asarray(v))
-        # greedy (deployment/inference — paper §4.2); jit cached across calls
+            return self.sample_actions(sites, feats=feats)[0]
+        ctx, mask, vs = feats if feats is not None else self.feats(sites)
         return np.asarray(self._jit_greedy(self.params, ctx, mask, vs))
 
     # -- PPO update ---------------------------------------------------------
@@ -388,6 +399,17 @@ class PPOAgent:
                 self.last_minibatch_count += 1
         return float(np.mean(losses))
 
+    # -- Agent protocol: fit == the RL training loop ------------------------
+    def fit(self, sites, oracle, *, total_steps: Optional[int] = None,
+            batch: Optional[int] = None, log_every: int = 1,
+            rng_seed: int = 0) -> "PPOAgent":
+        """Train the bandit against ``oracle`` (any Oracle — cost-model or
+        measured).  Default budget: 10 training batches."""
+        self.train(sites, oracle,
+                   total_steps=total_steps or 10 * self.nv.train_batch,
+                   batch=batch, log_every=log_every, rng_seed=rng_seed)
+        return self
+
     # -- training loop (contextual bandit) ---------------------------------
     def train(self, sites, env: CostModelEnv, total_steps: int,
               batch: Optional[int] = None, log_every: int = 1,
@@ -410,7 +432,8 @@ class PPOAgent:
                 a, raw, logp, v = self._jit_sample(self.params, k, *feats)
                 a = np.asarray(a)
             else:
-                a, raw, logp, v = self.act(batch_sites, feats=feats)
+                a, raw, logp, v = self.sample_actions(batch_sites,
+                                                      feats=feats)
             rewards = env.rewards_batch(batch_sites, a)
             loss = self.update(batch_sites, a, raw, logp, rewards,
                                feats=feats)

@@ -1,18 +1,37 @@
 """Random search: one uniform action per site (paper Fig. 7 — performs
-*worse* than the baseline, evidencing that the RL policy learned structure)."""
+*worse* than the baseline, evidencing that the RL policy learned structure).
+
+Vectorized: one ``rng.integers`` draw per site-kind group (the per-head
+upper bounds broadcast), instead of a Python loop over sites.
+"""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core import costmodel_vec
+
 
 class RandomAgent:
-    def __init__(self, space, seed: int = 0):
+    name = "random"
+
+    def __init__(self, space=None, seed: int = 0):
         self.space = space
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
 
-    def act(self, sites):
-        out = []
-        for s in sites:
-            sizes = self.space.valid_sizes(s.kind)
-            out.append([self.rng.integers(0, n) for n in sizes])
-        return np.array(out, np.int64)
+    def fit(self, sites, oracle, **_) -> "RandomAgent":
+        if self.space is None:
+            self.space = oracle.space
+        return self
+
+    def act(self, sites, *, sample: bool = False) -> np.ndarray:
+        if self.space is None:
+            raise RuntimeError("RandomAgent.act before fit (no ActionSpace)")
+        # sample=False (deployment) must be deterministic: redraw from the
+        # construction seed instead of advancing the stateful stream
+        rng = self.rng if sample else np.random.default_rng(self.seed)
+        out = np.zeros((len(sites), 3), np.int64)
+        for kind, idx in costmodel_vec.group_by_kind(sites).items():
+            sizes = np.asarray(self.space.valid_sizes(kind), np.int64)
+            out[idx] = rng.integers(0, sizes, size=(len(idx), 3))
+        return out

@@ -213,11 +213,18 @@ def cost_grid(space, sites: Sequence[KernelSite]) -> np.ndarray:
     brute-force flat action.
     """
     groups = group_by_kind(sites)
+    if len(groups) == 1:                   # single kind: no padding needed
+        (kind, _), = groups.items()
+        return cost_grid_kind(space, sites, kind)
     a_max = max((space.n_actions(k) for k in groups), default=0)
-    out = np.full((len(sites), a_max), ILLEGAL, np.float64)
+    # empty + per-row padding writes (not np.full): every cell is written
+    # exactly once, which matters on the memory-bound assembly path
+    out = np.empty((len(sites), a_max), np.float64)
     for kind, idx in groups.items():
-        out[idx, :space.n_actions(kind)] = cost_grid_kind(
-            space, [sites[i] for i in idx], kind)
+        na = space.n_actions(kind)
+        out[idx, :na] = cost_grid_kind(space, [sites[i] for i in idx], kind)
+        if na < a_max:
+            out[idx, na:] = ILLEGAL
     return out
 
 
@@ -265,6 +272,38 @@ def costs_for_actions(space, sites: Sequence[KernelSite],
         tiles = _tiles_for_actions_kind(space, kind, acts[idx], idx)
         c = _site_cols([sites[i] for i in idx], grid=False)
         out[idx] = _cost_kind(kind, c, tiles, grid=False)
+    return out
+
+
+def tiles_for_actions(space, sites: Sequence[KernelSite],
+                      actions) -> np.ndarray:
+    """(n, 3) tile values for per-site action indices (unused dims = 1).
+
+    The batched ``ActionSpace.tiles``: clamps by default, raises in strict
+    mode.  Used by oracles that price tiles rather than action indices
+    (``MeasuredEnv``)."""
+    acts = np.asarray(actions, np.int64).reshape(len(sites), -1)
+    out = np.ones((len(sites), 3), np.int64)
+    for kind, idx in group_by_kind(sites).items():
+        out[idx] = _tiles_for_actions_kind(space, kind, acts[idx], idx)
+    return out
+
+
+def costs_for_tiles(sites: Sequence[KernelSite], tiles) -> np.ndarray:
+    """(n,) model cost of each site under explicit tile values (``inf`` =
+    illegal).  Unlike :func:`costs_for_actions` the tiles need not lie on
+    the action grid — this prices arbitrary ``TileProgram`` entries and is
+    the legality pre-filter for hardware measurement."""
+    t = np.asarray(tiles, np.int64)
+    if t.ndim != 2 or t.shape[0] != len(sites):
+        raise ValueError(f"tiles must be (n_sites, k), got {t.shape}")
+    if t.shape[1] < 3:
+        t = np.concatenate(
+            [t, np.ones((len(t), 3 - t.shape[1]), np.int64)], 1)
+    out = np.empty((len(sites),), np.float64)
+    for kind, idx in group_by_kind(sites).items():
+        c = _site_cols([sites[i] for i in idx], grid=False)
+        out[idx] = _cost_kind(kind, c, t[idx], grid=False)
     return out
 
 

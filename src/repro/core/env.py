@@ -146,14 +146,15 @@ class CostModelEnv:
 
     # -- the paper's eq. 2 --
     def reward(self, site: KernelSite, action: Sequence[int]) -> float:
-        tiles = self.space.tiles(site.kind, action)
-        t = costmodel.site_cost(site, tiles)
+        t = self.cost(site, action)
         if t is None:
             return float(self.cfg.fail_penalty)
         # the scalar reference path recomputes the baseline per call,
         # faithful to the original implementation (what bench_env measures)
         t_base = (self.baseline_cost(site) if self.vectorized
                   else costmodel.baseline_cost(site))
+        if not math.isfinite(t_base):       # failed baseline measurement
+            return float(self.cfg.fail_penalty)
         if self.cfg.reward_noise > 0:
             t *= float(np.exp(self._rng.normal(0, self.cfg.reward_noise)))
         return float((t_base - t) / t_base)
@@ -166,8 +167,11 @@ class CostModelEnv:
         t = self.cost(site, action)
         t_base = (self.baseline_cost(site) if self.vectorized
                   else costmodel.baseline_cost(site))
-        if t is None:
-            return 0.1                  # illegal: 10x slower, as the penalty
+        if t is None or not math.isfinite(t_base):
+            # illegal tile (or failed baseline measurement):
+            # cfg.illegal_slowdown-times slower than baseline — the same
+            # constant vectorizer.program_speedup charges
+            return 1.0 / float(self.cfg.illegal_slowdown)
         return float(t_base / t)
 
     # -- batched fast paths -------------------------------------------------
@@ -187,7 +191,9 @@ class CostModelEnv:
                              for s, a in zip(sites, actions)], np.float32)
         if not len(sites):
             return np.zeros((0,), np.float32)
-        t = costmodel_vec.costs_for_actions(self.space, sites, actions)
+        # routed through the overridable batched surface so subclasses
+        # (MeasuredEnv) swap the cost source without reimplementing eq. 2
+        t = self.costs_batch(sites, actions)
         t_base = self.baseline_costs(sites)
         if self.cfg.reward_noise > 0:
             # draw only for legal entries, in site order — the same RNG
@@ -197,20 +203,158 @@ class CostModelEnv:
             t = t.copy()
             t[legal] *= np.exp(self._rng.normal(
                 0, self.cfg.reward_noise, size=int(legal.sum())))
-        r = np.where(np.isfinite(t), (t_base - t) / t_base,
-                     float(self.cfg.fail_penalty))
+        # a failed baseline measurement (inf t_base under MeasuredEnv)
+        # fails closed to the penalty — never a silent nan into training.
+        # errstate: the np.where arms evaluate eagerly and the discarded
+        # arm divides by inf
+        with np.errstate(invalid="ignore", divide="ignore"):
+            r = np.where(np.isfinite(t) & np.isfinite(t_base),
+                         (t_base - t) / t_base,
+                         float(self.cfg.fail_penalty))
         return r.astype(np.float32)
 
     def speedups_batch(self, sites, actions) -> np.ndarray:
-        """(n,) t_baseline / t_action with the 0.1x illegal clamp."""
+        """(n,) t_baseline / t_action with the illegal-tile clamp
+        (``1 / cfg.illegal_slowdown`` — the env/vectorizer-shared
+        constant)."""
         t = self.costs_batch(sites, actions)
         if self.vectorized:
             t_base = self.baseline_costs(sites)
         else:                     # faithful scalar reference: recompute
             t_base = np.array([costmodel.baseline_cost(s) for s in sites])
-        return np.where(np.isfinite(t), t_base / np.maximum(t, 1e-300), 0.1)
+        return np.where(np.isfinite(t) & np.isfinite(t_base),
+                        t_base / np.maximum(t, 1e-300),
+                        1.0 / float(self.cfg.illegal_slowdown))
 
     def cost_grid(self, sites) -> np.ndarray:
         """(n_sites, max_n_actions) full action-grid cost tensor (``inf``
         for illegal tiles and for padding past a kind's action count)."""
         return costmodel_vec.cost_grid(self.space, sites)
+
+    def tiles_costs(self, sites, tiles) -> np.ndarray:
+        """(n,) cost of explicit tile values — need not lie on the action
+        grid (``inf`` = illegal).  Prices arbitrary ``TileProgram``
+        entries with the same source as the rest of this oracle, so
+        ``program_speedup`` never mixes cost sources."""
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        return costmodel_vec.costs_for_tiles(sites, tiles)
+
+
+class MeasuredEnv(CostModelEnv):
+    """Hardware-measurement oracle — eq. 2 priced by wall-clock timings.
+
+    On TPU the analytic cost model is swapped for measurement of the
+    compiled kernel; this class is that swap, behind the *same* batched
+    Oracle surface as :class:`CostModelEnv` (``costs_batch`` /
+    ``rewards_batch`` / ``speedups_batch`` / ``cost_grid`` /
+    ``baseline_costs``), so agents and the facade never branch on it.
+
+    ``measure_fn(sites, tiles) -> (n,) seconds`` is the batched measure
+    hook: called at most once per oracle entry point with every
+    cache-missing, model-legal ``(site, tile)`` pair of that batch
+    (``tiles`` is an ``(n, 3)`` int array; unused dims are 1).  Non-finite
+    or non-positive returns mark failed runs and are treated as illegal
+    (a failed *baseline* measurement fails the whole site closed to the
+    penalty — never a nan reward).  Results, including failures, are
+    cached per ``(site.key(), tiles)`` and deduplicated within a batch, so
+    repeated tuning sweeps re-measure nothing; ``clear_result_cache()``
+    forces a re-measure after flaky runs.
+
+    Tiles the cost model rejects (VMEM overflow — the compile-failure
+    analogue) are never sent to the hook: a kernel that cannot compile
+    cannot be timed.  With ``measure_fn=None`` (off-TPU) every query falls
+    back to the analytic model, making this a drop-in
+    :class:`CostModelEnv`.
+    """
+
+    def __init__(self, nv_cfg: NeuroVecConfig, measure_fn=None,
+                 seed: int = 0):
+        super().__init__(nv_cfg, seed=seed, vectorized=True)
+        self.measure_fn = measure_fn
+        self._result_cache: Dict[Tuple[str, Tuple[int, int, int]],
+                                 float] = {}
+        self.measure_calls = 0          # hook invocations (for tests/ops)
+        self.measured_pairs = 0         # (site, tile) pairs sent to hw
+
+    def clear_result_cache(self) -> None:
+        self._result_cache.clear()
+
+    # -- the measured cost of explicit tiles --------------------------------
+    def _measured_costs(self, sites, tiles) -> np.ndarray:
+        """(n,) seconds per (site, tile) pair; ``inf`` = illegal/failed.
+        One batched hook call covering all cache misses."""
+        tiles = np.asarray(tiles, np.int64)
+        keys = [(s.key(), (int(t[0]), int(t[1]), int(t[2])))
+                for s, t in zip(sites, tiles)]
+        # first occurrence of each uncached key: duplicates inside one
+        # batch (training samples sites with replacement) are measured once
+        first = {}
+        for i, k in enumerate(keys):
+            if k not in self._result_cache and k not in first:
+                first[k] = i
+        miss = list(first.values())
+        if miss:
+            m_sites = [sites[i] for i in miss]
+            m_tiles = tiles[miss]
+            vals = costmodel_vec.costs_for_tiles(m_sites, m_tiles)
+            if self.measure_fn is not None:
+                legal = np.flatnonzero(np.isfinite(vals))
+                if len(legal):
+                    t = np.asarray(self.measure_fn(
+                        [m_sites[j] for j in legal], m_tiles[legal]),
+                        np.float64).reshape(-1)
+                    if t.shape != (len(legal),):
+                        raise ValueError(
+                            f"measure_fn returned shape {t.shape}, "
+                            f"expected ({len(legal)},)")
+                    vals[legal] = np.where(np.isfinite(t) & (t > 0),
+                                           t, np.inf)
+                    self.measure_calls += 1
+                    self.measured_pairs += len(legal)
+            for i, v in zip(miss, vals):
+                self._result_cache[keys[i]] = float(v)
+        return np.array([self._result_cache[k] for k in keys], np.float64)
+
+    # -- Oracle surface (measured) ------------------------------------------
+    def costs_batch(self, sites, actions) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        tiles = costmodel_vec.tiles_for_actions(self.space, sites, actions)
+        return self._measured_costs(sites, tiles)
+
+    def baseline_costs(self, sites) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        return self._measured_costs(
+            sites, costmodel_vec.baseline_tiles_batch(sites))
+
+    def baseline_cost(self, site: KernelSite) -> float:
+        return float(self.baseline_costs([site])[0])
+
+    def cost(self, site: KernelSite, action: Sequence[int]) -> Optional[float]:
+        c = float(self.costs_batch([site], np.asarray([action]))[0])
+        return None if math.isinf(c) else c
+
+    def tiles_costs(self, sites, tiles) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        t = np.asarray(tiles, np.int64)
+        if t.ndim != 2 or t.shape[0] != len(sites):  # same error as model
+            raise ValueError(f"tiles must be (n_sites, k), got {t.shape}")
+        if t.shape[1] < 3:                   # pad unused dims like the model
+            t = np.concatenate(
+                [t, np.ones((len(t), 3 - t.shape[1]), np.int64)], 1)
+        return self._measured_costs(sites, t)
+
+    def cost_grid(self, sites) -> np.ndarray:
+        groups = costmodel_vec.group_by_kind(sites)
+        a_max = max((self.space.n_actions(k) for k in groups), default=0)
+        out = np.full((len(sites), a_max), np.inf, np.float64)
+        for kind, idx in groups.items():
+            tg = costmodel_vec.action_tiles_grid(self.space, kind)
+            rep_sites = [sites[i] for i in idx for _ in range(len(tg))]
+            rep_tiles = np.tile(tg, (len(idx), 1))
+            out[idx, :len(tg)] = self._measured_costs(
+                rep_sites, rep_tiles).reshape(len(idx), len(tg))
+        return out

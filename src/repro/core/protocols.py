@@ -1,0 +1,95 @@
+"""The two formal contracts behind ``repro.api`` (paper §3.5).
+
+The paper's framework is *end-to-end with interchangeable decision
+methods*: one extraction → embedding → decision → injection pipeline, into
+which RL, nearest-neighbor search, decision trees, brute force, random
+search, or the Polly-style heuristic can be slotted.  These protocols make
+that pluggability formal:
+
+* :class:`Agent` — a decision method.  ``fit(sites, oracle)`` trains (or
+  labels, or no-ops for search-free methods) against a reward oracle;
+  ``act(sites, sample=False)`` maps a batch of kernel sites to ``(n, 3)``
+  per-head action indices.  ``sample=False`` must be deterministic (the
+  deployment mode, paper §4.2); every returned index must be in range for
+  its site's kind (strict-actions compliant — no reliance on clamping).
+
+* :class:`Oracle` — a reward source.  The batched surface grown in PR 1
+  (``costs_batch`` / ``rewards_batch`` / ``speedups_batch`` / ``cost_grid``
+  / ``baseline_costs``) is the canonical interface; the analytic
+  :class:`~repro.core.env.CostModelEnv` and the hardware-measuring
+  :class:`~repro.core.env.MeasuredEnv` both satisfy it, so agents and the
+  :class:`~repro.api.NeuroVectorizer` facade never care which one they are
+  talking to.
+
+Both are :func:`typing.runtime_checkable`, so ``isinstance(x, Oracle)``
+verifies structural conformance (presence of the members, not signatures —
+the shared contract test in ``tests/test_api.py`` checks behaviour).
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Agent(Protocol):
+    """A vectorization decision method (RL, NNS, dtree, brute, ...)."""
+
+    name: str
+
+    def fit(self, sites: Sequence, oracle: "Oracle", **kwargs) -> "Agent":
+        """Train/label against ``oracle``; returns ``self`` for chaining.
+
+        Search-free methods (random, polly, baseline) treat this as a
+        no-op that may capture the oracle for later use."""
+        ...
+
+    def act(self, sites: Sequence, *, sample: bool = False) -> np.ndarray:
+        """``(n, 3)`` integer per-head action indices for ``sites``.
+
+        ``sample=False`` (default, the deployment mode) must be
+        deterministic; ``sample=True`` may draw from the method's
+        exploration distribution."""
+        ...
+
+
+@runtime_checkable
+class Oracle(Protocol):
+    """A batched reward oracle over (site, action) pairs.
+
+    ``space`` is the shared :class:`~repro.core.env.ActionSpace` and
+    ``cfg`` the :class:`~repro.configs.neurovec.NeuroVecConfig` whose
+    penalty semantics (``fail_penalty``, ``illegal_slowdown``) the
+    methods below honour."""
+
+    cfg: object
+    space: object
+
+    def baseline_costs(self, sites: Sequence) -> np.ndarray:
+        """(n,) heuristic-baseline runtime per site."""
+        ...
+
+    def costs_batch(self, sites: Sequence, actions) -> np.ndarray:
+        """(n,) runtime of each site under its chosen action; ``inf`` =
+        illegal (the compile-failure analogue)."""
+        ...
+
+    def rewards_batch(self, sites: Sequence, actions) -> np.ndarray:
+        """(n,) paper eq. 2 rewards with the fail penalty for illegal."""
+        ...
+
+    def speedups_batch(self, sites: Sequence, actions) -> np.ndarray:
+        """(n,) t_baseline / t_action, clamped for illegal actions."""
+        ...
+
+    def cost_grid(self, sites: Sequence) -> np.ndarray:
+        """(n, max_n_actions) full action-grid cost tensor (``inf`` pads
+        illegal tiles and columns past a kind's action count)."""
+        ...
+
+    def tiles_costs(self, sites: Sequence, tiles) -> np.ndarray:
+        """(n,) runtime of each site under explicit tile values (which
+        need not lie on the action grid; ``inf`` = illegal) — what
+        ``program_speedup`` prices saved ``TileProgram`` entries with."""
+        ...

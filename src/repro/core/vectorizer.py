@@ -13,8 +13,10 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.neurovec import DEFAULT, NeuroVecConfig
-from repro.core import costmodel
+from repro.core import costmodel, costmodel_vec
 from repro.core.env import ActionSpace, CostModelEnv
 from repro.core.extractor import extract_sites
 from repro.models import compute
@@ -37,11 +39,14 @@ class TileProgram:
 
 
 def tune(sites: List[KernelSite], agent, space: ActionSpace) -> TileProgram:
-    """Greedy (inference-mode) factor assignment for every site."""
+    """Greedy (inference-mode) factor assignment for every site.
+
+    ``agent`` is any :class:`repro.core.protocols.Agent` — the duck-typed
+    callable fallback is gone; wrap ad-hoc policies via
+    ``make_agent`` or a tiny class with ``act``."""
     if not sites:
         return TileProgram()
-    actions = agent.act(sites, sample=False) if hasattr(
-        agent, "act") else agent(sites)
+    actions = np.asarray(agent.act(sites, sample=False))
     prog = TileProgram()
     for s, a in zip(sites, actions):
         prog.tiles[s.key()] = space.tiles(s.kind, a)
@@ -69,12 +74,34 @@ def tune_step_fn(step_fn, abstract_args, agent,
 
 def program_speedup(program: TileProgram, sites: List[KernelSite],
                     env: Optional[CostModelEnv] = None) -> float:
-    """Aggregate modelled speedup of a program over the heuristic baseline."""
-    t_base = sum(costmodel.baseline_cost(s) for s in sites)
-    t_new = 0.0
-    for s in sites:
+    """Aggregate modelled speedup of a program over the heuristic baseline.
+
+    Sites missing from the program run at baseline; sites whose tiles are
+    illegal are charged ``cfg.illegal_slowdown * t_baseline`` — the same
+    constant the environment's ``speedup``/``speedups_batch`` clamp to.
+    Pass ``env`` (any Oracle) to reuse its baseline cache / config."""
+    if not sites:
+        return 1.0
+    cfg = env.cfg if env is not None else DEFAULT
+    t_base = (np.asarray(env.baseline_costs(sites)) if env is not None
+              else costmodel_vec.baseline_costs(sites))
+    rows = np.ones((len(sites), 3), np.int64)
+    for i, s in enumerate(sites):
         tiles = program.tiles.get(s.key())
-        c = (costmodel.site_cost(s, tiles) if tiles is not None
-             else costmodel.baseline_cost(s))
-        t_new += c if c is not None else 10 * costmodel.baseline_cost(s)
-    return t_base / t_new
+        if tiles is None:
+            tiles = costmodel.baseline_tiles(s)
+        k = min(len(tiles), 3)
+        rows[i, :k] = tiles[:k]
+    price = getattr(env, "tiles_costs", None) if env is not None else None
+    t_new = (np.asarray(price(sites, rows)) if price is not None
+             else costmodel_vec.costs_for_tiles(sites, rows))
+    # a site whose *baseline* failed to measure (inf under MeasuredEnv) is
+    # unscorable — excluded from the aggregate rather than failing open to
+    # inf/nan
+    ok = np.isfinite(t_base)
+    if not ok.any():
+        return 1.0
+    t_base, t_new = t_base[ok], t_new[ok]
+    t_new = np.where(np.isfinite(t_new), t_new,
+                     float(cfg.illegal_slowdown) * t_base)
+    return float(t_base.sum() / t_new.sum())

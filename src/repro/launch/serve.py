@@ -1,13 +1,20 @@
-"""Serving driver: batched prefill + greedy decode with a KV/state cache.
+"""Serving driver: batched prefill + greedy decode with a KV/state cache,
+optionally running under a NeuroVectorizer tile plan (``repro.api``).
 
 Smoke scale on CPU::
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm_1_3b \
       --batch 4 --prompt-len 32 --gen 16
+
+Tile tuning: ``--autotune brute`` plans tiles for the serving kernels with
+any registered agent (modelled speedup is printed); ``--tiles f.json``
+loads a saved :class:`~repro.api.TileProgram` instead; ``--inject`` routes
+the decode through the tuned Pallas kernels (interpret mode off-TPU).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -18,6 +25,35 @@ from repro.models.lm import build_model
 from repro.train.steps import make_prefill_step, make_serve_step
 
 
+def _tile_plan(args, model, params, batch, cache):
+    """Extract the serving-step kernel sites and produce a TileProgram
+    through the ``repro.api`` facade (or load one from disk)."""
+    from repro import api
+
+    B = batch["tokens"].shape[0]
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    sites = {s.key(): s for s in api.extract_sites(
+        make_prefill_step(model), params, batch, cache)}
+    sites.update((s.key(), s) for s in api.extract_sites(
+        make_serve_step(model), params, tok, jnp.int32(0), cache))
+    sites = list(sites.values())
+
+    if args.tiles:
+        prog = api.TileProgram.load(args.tiles)
+    else:
+        nv = api.NeuroVectorizer(agent=args.autotune)
+        fit_kw = ({"total_steps": args.autotune_steps}
+                  if args.autotune == "ppo" else {})
+        nv.fit(sites, **fit_kw)
+        prog = nv.tune_sites(sites)
+        if args.save_tiles:
+            prog.save(args.save_tiles)
+    sp = api.program_speedup(prog, sites)
+    print(f"[serve] tile plan: {len(prog.tiles)} tiles over {len(sites)} "
+          f"sites, modelled speedup {sp:.2f}x")
+    return prog
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_8b")
@@ -25,7 +61,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--autotune", default=None,
+                    help="tune serving kernels with this repro.api agent "
+                         "(ppo, dtree, nns, brute, random, polly, baseline)")
+    ap.add_argument("--autotune-steps", type=int, default=2000,
+                    help="RL budget when --autotune ppo")
+    ap.add_argument("--tiles", default=None,
+                    help="load a saved TileProgram instead of tuning")
+    ap.add_argument("--save-tiles", default=None)
+    ap.add_argument("--inject", action="store_true",
+                    help="run decode through the tuned Pallas kernels")
     args = ap.parse_args(argv)
+    if args.inject and not (args.autotune or args.tiles):
+        ap.error("--inject requires a tile plan: pass --autotune or --tiles")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -49,17 +97,30 @@ def main(argv=None):
     prefill = jax.jit(make_prefill_step(model))
     serve = jax.jit(make_serve_step(model), donate_argnums=(3,))
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    out = [tok]
-    n_pre = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
-    for i in range(args.gen - 1):
-        pos = jnp.int32(n_pre + args.prompt_len + i)
-        tok, logits, cache = serve(params, tok, pos, cache)
-        out.append(tok)
-    seq = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
+    prog = None
+    if args.autotune or args.tiles:
+        prog = _tile_plan(args, model, params, batch, cache)
+
+    run_ctx = contextlib.nullcontext()
+    if prog is not None and args.inject:
+        from repro import api
+        # interpret keyed on the real backend: Pallas compiles natively on
+        # TPU, interprets elsewhere — independent of the model-size flag
+        run_ctx = api.inject(prog,
+                             interpret=jax.default_backend() != "tpu")
+
+    with run_ctx:
+        t0 = time.time()
+        logits, cache = prefill(params, batch, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        n_pre = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+        for i in range(args.gen - 1):
+            pos = jnp.int32(n_pre + args.prompt_len + i)
+            tok, logits, cache = serve(params, tok, pos, cache)
+            out.append(tok)
+        seq = jnp.concatenate(out, axis=1)
+        dt = time.time() - t0
     print(f"[serve] {B} requests, {args.gen} tokens each in {dt:.2f}s "
           f"({B * args.gen / dt:.1f} tok/s)")
     print("[serve] sample:", seq[0].tolist())

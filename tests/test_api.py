@@ -1,0 +1,339 @@
+"""The unified Agent/Oracle protocol and the ``repro.api`` facade.
+
+Contains THE shared agent contract test: every registry name must produce
+an Agent whose actions are well-shaped, integer, in-range (strict-actions
+compliant) and deterministic under ``sample=False``."""
+import numpy as np
+import pytest
+
+from repro.api import (AGENT_NAMES, Agent, CostModelEnv, MeasuredEnv,
+                       NeuroVecConfig, NeuroVectorizer, Oracle, TileProgram,
+                       baseline_program, make_agent, program_speedup)
+from repro.core import costmodel, dataset
+from repro.core.agents import polly
+from repro.core.env import set_strict_actions
+from repro.models.compute import KernelSite
+
+NV = NeuroVecConfig(train_batch=64, sgd_minibatch=32, ppo_epochs=2)
+ENV = CostModelEnv(NV)
+CORPUS = dataset.generate(24, seed=7)          # mixed kinds
+HELDOUT = dataset.generate(12, seed=8)
+
+
+def _fitted(name):
+    agent = make_agent(name, NV, seed=0)
+    fit_kw = {"total_steps": 128} if name == "ppo" else {}
+    return agent.fit(CORPUS, ENV, **fit_kw)
+
+
+# ---------------------------------------------------------------------------
+# the shared agent contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", AGENT_NAMES)
+def test_agent_contract(name):
+    agent = _fitted(name)
+    assert isinstance(agent, Agent)
+    assert agent.name == name
+
+    a1 = np.asarray(agent.act(HELDOUT, sample=False))
+    # shape / dtype
+    assert a1.shape == (len(HELDOUT), 3)
+    assert np.issubdtype(a1.dtype, np.integer)
+    # range: strict-actions compliant per site kind (no clamp reliance)
+    for s, a in zip(HELDOUT, a1):
+        for d, n in enumerate(ENV.space.valid_sizes(s.kind)):
+            assert 0 <= a[d] < n, (name, s.kind, d, a)
+    # determinism under sample=False (the deployment mode)
+    a2 = np.asarray(agent.act(HELDOUT, sample=False))
+    np.testing.assert_array_equal(a1, a2)
+    # actions survive strict mode end to end
+    set_strict_actions(True)
+    try:
+        sp = ENV.speedups_batch(HELDOUT, a1)
+    finally:
+        set_strict_actions(False)
+    assert sp.shape == (len(HELDOUT),) and (sp > 0).all()
+    # sampling path keeps the same output contract
+    a3 = np.asarray(agent.act(HELDOUT, sample=True))
+    assert a3.shape == (len(HELDOUT), 3)
+
+
+def test_make_agent_registry_smoke():
+    for name in AGENT_NAMES:
+        agent = make_agent(name, NV, seed=0)
+        assert isinstance(agent, Agent) and agent.name == name
+    with pytest.raises(ValueError, match="unknown agent"):
+        make_agent("definitely-not-an-agent", NV)
+
+
+def test_random_agent_vectorized_and_seeded():
+    r1 = make_agent("random", NV, seed=3).fit([], ENV)
+    r2 = make_agent("random", NV, seed=3).fit([], ENV)
+    sites = dataset.generate(64, seed=9)
+    np.testing.assert_array_equal(r1.act(sites), r2.act(sites))
+    # sample=True advances the stream (random *search*), sample=False not
+    s1 = r1.act(sites, sample=True)
+    s2 = r1.act(sites, sample=True)
+    assert (np.asarray(s1) != np.asarray(s2)).any()
+    np.testing.assert_array_equal(r1.act(sites), r2.act(sites))
+    # draws cover the per-kind space, not a constant
+    a = np.asarray(r1.act(sites))
+    assert len(np.unique(a[:, 0])) > 1
+
+
+def test_polly_vectorized_matches_scalar_walk():
+    sites = dataset.generate(40, seed=12)
+    acts = make_agent("polly", NV).fit([], ENV).act(sites)
+    for s, a in zip(sites, acts):
+        ref = polly._polly_action_ref(ENV.space, s)
+        assert tuple(a) == tuple(ref), (s.kind, tuple(a), tuple(ref))
+
+
+# ---------------------------------------------------------------------------
+# Oracle protocol: CostModelEnv and MeasuredEnv are interchangeable
+# ---------------------------------------------------------------------------
+
+def test_oracle_protocol_conformance():
+    assert isinstance(ENV, Oracle)
+    assert isinstance(MeasuredEnv(NV), Oracle)
+    assert not isinstance(object(), Oracle)
+
+
+def test_measured_env_cost_model_fallback():
+    m = MeasuredEnv(NV)                        # no hook: off-TPU fallback
+    sites = CORPUS[:8]
+    acts = make_agent("baseline", NV).fit([], ENV).act(sites)
+    np.testing.assert_allclose(m.costs_batch(sites, acts),
+                               ENV.costs_batch(sites, acts), rtol=1e-12)
+    np.testing.assert_allclose(m.baseline_costs(sites),
+                               ENV.baseline_costs(sites), rtol=1e-12)
+    np.testing.assert_allclose(m.cost_grid(sites), ENV.cost_grid(sites),
+                               rtol=1e-12)
+    np.testing.assert_allclose(m.rewards_batch(sites, acts),
+                               ENV.rewards_batch(sites, acts), rtol=1e-6)
+
+
+def test_measured_env_batched_hook_and_cache():
+    calls = []
+
+    def hook(sites, tiles):
+        calls.append(len(sites))
+        out = [costmodel.site_cost(s, tuple(int(x) for x in t))
+               for s, t in zip(sites, tiles)]
+        assert all(c is not None for c in out), "hook saw an illegal tile"
+        return np.array([2.0 * c for c in out])   # "hardware" = 2x model
+
+    m = MeasuredEnv(NV, measure_fn=hook)
+    sites = CORPUS[:6]
+    acts = make_agent("baseline", NV).fit([], ENV).act(sites)
+    c1 = m.costs_batch(sites, acts)
+    assert calls == [len(sites)], "hook must be called once, batched"
+    np.testing.assert_allclose(c1, 2.0 * ENV.costs_batch(sites, acts),
+                               rtol=1e-12)
+    # per-site result cache: repeats measure nothing
+    np.testing.assert_allclose(m.costs_batch(sites, acts), c1, rtol=0)
+    assert calls == [len(sites)]
+    # rewards/speedups are scale-invariant: measured == modelled here
+    np.testing.assert_allclose(m.rewards_batch(sites, acts),
+                               ENV.rewards_batch(sites, acts), rtol=1e-5)
+    np.testing.assert_allclose(m.speedups_batch(sites, acts),
+                               ENV.speedups_batch(sites, acts), rtol=1e-6)
+
+
+def test_measured_env_illegal_never_measured():
+    def hook(sites, tiles):                     # hardware would hang/fail
+        for s, t in zip(sites, tiles):
+            assert costmodel.site_cost(s, tuple(int(x) for x in t)) \
+                is not None
+        return np.array([1e-3] * len(sites))
+
+    m = MeasuredEnv(NV, measure_fn=hook)
+    big = KernelSite(site="x", kind="matmul", m=65536, n=16384, k=16384)
+    a_ill = np.array([[len(NV.bm_choices) - 1, len(NV.bn_choices) - 1,
+                       len(NV.bk_choices) - 1]])
+    assert m.rewards_batch([big], a_ill)[0] == NV.fail_penalty
+    assert m.speedups_batch([big], a_ill)[0] == pytest.approx(
+        1.0 / NV.illegal_slowdown)
+    assert m.cost(big, a_ill[0]) is None
+
+
+def test_measured_env_failed_run_is_illegal():
+    m = MeasuredEnv(NV, measure_fn=lambda sites, tiles: np.full(
+        len(sites), np.nan))                    # every measurement fails
+    s = CORPUS[0]
+    acts = make_agent("baseline", NV).fit([], ENV).act([s])
+    assert m.rewards_batch([s], acts)[0] == NV.fail_penalty
+
+
+def test_measured_env_failed_baseline_fails_closed():
+    # a flaky baseline measurement must not leak nan rewards / inf speedups
+    def hook(sites, tiles):
+        return np.array([np.nan if (s.key(), tuple(map(int, t))) in bad
+                         else costmodel.site_cost(s, tuple(map(int, t)))
+                         for s, t in zip(sites, tiles)], np.float64)
+
+    s = CORPUS[0]
+    bad = {(s.key(), tuple(costmodel.baseline_tiles(s))
+            + (1,) * (3 - len(costmodel.baseline_tiles(s))))}
+    m = MeasuredEnv(NV, measure_fn=hook)
+    acts = make_agent("brute", NV).fit([s], CostModelEnv(NV)).act([s])
+    r = m.rewards_batch([s], acts)
+    sp = m.speedups_batch([s], acts)
+    assert np.isfinite(r).all() and r[0] == NV.fail_penalty
+    assert np.isfinite(sp).all() and sp[0] == pytest.approx(
+        1.0 / NV.illegal_slowdown)
+    assert m.speedup(s, acts[0]) == pytest.approx(1.0 / NV.illegal_slowdown)
+    assert m.reward(s, acts[0]) == NV.fail_penalty
+
+
+def test_measured_env_dedups_within_batch():
+    pairs = []
+
+    def hook(sites, tiles):
+        pairs.append(len(sites))
+        return np.asarray([costmodel.site_cost(s, tuple(map(int, t)))
+                           for s, t in zip(sites, tiles)], np.float64)
+
+    m = MeasuredEnv(NV, measure_fn=hook)
+    s = CORPUS[0]
+    a = make_agent("baseline", NV).fit([], ENV).act([s])[0]
+    # training samples sites with replacement: 5 copies = 1 measurement
+    c = m.costs_batch([s] * 5, np.tile(a, (5, 1)))
+    assert pairs == [1] and m.measured_pairs == 1
+    assert np.allclose(c, c[0])
+
+
+def test_program_speedup_consistent_under_measured_oracle():
+    # baselines AND program tiles must be priced by the same oracle: a
+    # uniform 2x-slower "hardware" cancels out exactly
+    m = MeasuredEnv(NV, measure_fn=lambda sites, tiles: np.asarray(
+        [2.0 * costmodel.site_cost(s, tuple(map(int, t)))
+         for s, t in zip(sites, tiles)], np.float64))
+    sites = dataset.generate(6, seed=13)
+    assert program_speedup(baseline_program(sites), sites,
+                           m) == pytest.approx(1.0, rel=1e-9)
+
+
+def test_program_speedup_excludes_failed_baseline_sites():
+    # a site whose baseline measurement failed must not drag the aggregate
+    # to inf/nan — it is excluded
+    sites = dataset.generate(4, seed=14)
+    bad_key = sites[0].key()
+
+    def hook(ss, tt):
+        return np.asarray(
+            [np.nan if s.key() == bad_key
+             else costmodel.site_cost(s, tuple(map(int, t)))
+             for s, t in zip(ss, tt)], np.float64)
+
+    m = MeasuredEnv(NV, measure_fn=hook)
+    sp = program_speedup(baseline_program(sites), sites, m)
+    assert np.isfinite(sp) and sp == pytest.approx(1.0, rel=1e-9)
+
+
+def test_brute_agent_works_against_measured_oracle():
+    # same protocol => brute force can exhaustively 'measure' hardware
+    m = MeasuredEnv(NV, measure_fn=lambda sites, tiles: np.asarray(
+        [costmodel.site_cost(s, tuple(int(x) for x in t))
+         for s, t in zip(sites, tiles)], np.float64))
+    sites = CORPUS[:4]
+    a_meas = make_agent("brute", NV).fit(sites, m).act(sites)
+    a_model = make_agent("brute", NV).fit(sites, ENV).act(sites)
+    np.testing.assert_array_equal(a_meas, a_model)
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+def test_facade_fit_tune_inject_speedup():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import compute
+
+    nv = NeuroVectorizer(NV, agent="brute", seed=0)
+    sites = dataset.generate(10, seed=9)
+    prog = nv.fit(sites).tune_sites(sites)
+    assert set(prog.tiles) == {s.key() for s in sites}
+    assert nv.speedup(prog, sites) >= 1.0      # brute >= baseline
+
+    # step-fn path: extract -> tune -> inject, numbers unchanged
+    def step(x, w):
+        return compute.matmul(x, w, site="facade.mm")
+
+    specs = (jax.ShapeDtypeStruct((64, 96), jnp.float32),
+             jax.ShapeDtypeStruct((96, 128), jnp.float32))
+    prog2 = nv.tune(step, specs)
+    assert prog2.tiles
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 96))
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 128))
+    y_ref = step(x, w)
+    with nv.inject(prog2, interpret=True):
+        y_tuned = step(x, w)
+    np.testing.assert_allclose(np.asarray(y_tuned), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_facade_accepts_prebuilt_agent_and_oracle():
+    agent = make_agent("polly", NV)
+    oracle = MeasuredEnv(NV)
+    nv = NeuroVectorizer(NV, agent=agent, oracle=oracle)
+    assert nv.agent is agent and nv.oracle is oracle
+    sites = dataset.generate(5, seed=10)
+    prog = nv.fit(sites).tune_sites(sites)
+    assert len(prog.tiles) == 5
+
+
+# ---------------------------------------------------------------------------
+# TileProgram / program_speedup coverage (satellite)
+# ---------------------------------------------------------------------------
+
+def test_tileprogram_roundtrip_restores_tuples(tmp_path):
+    prog = TileProgram({"a|1": (128, 256, 512), "b|2": (64,),
+                        "c|3": (256, 1024)})
+    f = str(tmp_path / "tiles.json")
+    prog.save(f)
+    loaded = TileProgram.load(f)
+    assert loaded.tiles == prog.tiles
+    # JSON stores lists; load must restore hashable/equal-comparable tuples
+    assert all(isinstance(v, tuple) for v in loaded.tiles.values())
+
+
+def test_baseline_program_is_heuristic_and_unit_speedup():
+    sites = dataset.generate(8, seed=10)
+    prog = baseline_program(sites)
+    assert set(prog.tiles) == {s.key() for s in sites}
+    for s in sites:
+        assert prog.tiles[s.key()] == costmodel.baseline_tiles(s)
+    assert program_speedup(prog, sites, ENV) == pytest.approx(1.0,
+                                                              rel=1e-9)
+
+
+def test_program_speedup_missing_site_runs_at_baseline():
+    sites = dataset.generate(6, seed=11)
+    assert program_speedup(TileProgram(), sites) == pytest.approx(1.0,
+                                                                  rel=1e-9)
+    assert program_speedup(TileProgram(), []) == 1.0
+
+
+def test_program_speedup_illegal_tiles_charged_uniformly():
+    s = KernelSite(site="big", kind="matmul", m=65536, n=16384, k=16384)
+    bad = TileProgram({s.key(): (512, 512, 4096)})   # VMEM overflow
+    assert costmodel.site_cost(s, (512, 512, 4096)) is None
+    assert program_speedup(bad, [s], ENV) == pytest.approx(
+        1.0 / NV.illegal_slowdown)
+
+
+def test_illegal_penalty_constant_unified():
+    cfg = NeuroVecConfig(illegal_slowdown=25.0)
+    e = CostModelEnv(cfg)
+    s = KernelSite(site="big", kind="matmul", m=65536, n=16384, k=16384)
+    a = (len(cfg.bm_choices) - 1, len(cfg.bn_choices) - 1,
+         len(cfg.bk_choices) - 1)
+    # one cfg constant drives all three clamp sites
+    assert e.speedup(s, a) == pytest.approx(1 / 25.0)
+    assert e.speedups_batch([s], np.array([a]))[0] == pytest.approx(1 / 25.0)
+    prog = TileProgram({s.key(): e.space.tiles(s.kind, a)})
+    assert program_speedup(prog, [s], e) == pytest.approx(1 / 25.0)

@@ -162,10 +162,11 @@ def test_nns_and_dtree_predict_labels():
     sites = dataset.generate(120, seed=31)
     agent = PPOAgent(NV, seed=2)         # untrained embedder is fine here
     labels = brute_force_labels(ENV, sites)
-    nns = NNSAgent(agent.code_vectors, sites, labels)
+    nns = NNSAgent(agent.code_vectors).fit(sites, ENV, labels=labels)
     pred = nns.act(sites)                # 1-NN on the training set = exact
     assert (pred == labels).all()
-    dt = DecisionTreeAgent(agent.code_vectors, SPACE, sites, labels)
+    dt = DecisionTreeAgent(agent.code_vectors).fit(sites, ENV,
+                                                   labels=labels)
     pred_dt = dt.act(sites)
     sp_dt = np.mean([ENV.speedup(s, a) for s, a in zip(sites, pred_dt)])
     sp_base = 1.0

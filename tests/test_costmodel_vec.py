@@ -287,7 +287,7 @@ def test_update_includes_tail_minibatch():
     env = CostModelEnv(NV)
     sites = dataset.generate(70, seed=51)      # 70 % 64 = 6-sample tail
     feats = agent.feats(sites)
-    a, raw, logp, v = agent.act(sites, feats=feats)
+    a, raw, logp, v = agent.sample_actions(sites, feats=feats)
     r = env.rewards_batch(sites, a)
     agent.update(sites, a, raw, logp, r, feats=feats)
     # 1 full minibatch + 1 tail minibatch per epoch
@@ -295,7 +295,7 @@ def test_update_includes_tail_minibatch():
     # divisible batch: all-full single-dispatch path
     sites = dataset.generate(128, seed=52)
     feats = agent.feats(sites)
-    a, raw, logp, v = agent.act(sites, feats=feats)
+    a, raw, logp, v = agent.sample_actions(sites, feats=feats)
     r = env.rewards_batch(sites, a)
     agent.update(sites, a, raw, logp, r, feats=feats)
     assert agent.last_minibatch_count == NV.ppo_epochs * 2
