@@ -20,7 +20,6 @@ from __future__ import annotations
 import itertools
 import json
 import os
-import time
 
 import numpy as np
 
@@ -28,6 +27,7 @@ from repro.configs.neurovec import NeuroVecConfig
 from repro.core import dataset
 from repro.api import PPOAgent, brute_force_labels
 from repro.core.env import CostModelEnv
+from repro.measure.timing import interleaved_medians
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
 OUT = os.environ.get("BENCH_ENV_OUT", "BENCH_env.json")
@@ -42,16 +42,8 @@ PPO_CORPUS = 400
 
 
 def _median_times(fn_a, fn_b, reps=REPS):
-    """Interleaved A/B timing (cancels slow container-load drift)."""
-    ta, tb = [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn_a()
-        ta.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        fn_b()
-        tb.append(time.perf_counter() - t0)
-    return float(np.median(ta)), float(np.median(tb))
+    """The shared interleaved A/B loop from ``repro.measure.timing``."""
+    return interleaved_medians(fn_a, fn_b, reps=reps)
 
 
 def _scalar_brute_labels(env, sites):

@@ -1,0 +1,156 @@
+"""Benchmark of the hardware measurement subsystem (``repro.measure``).
+
+Writes ``BENCH_measure.json`` with three things the ROADMAP cares about:
+
+* ``timings_per_s`` — how fast the runner turns (site, tile) pairs into
+  seconds (compile+warmup included; the autotune-throughput ceiling).
+* ``cache`` — persistence proof: a second oracle against the same DB path
+  must perform **zero** kernel timings (``second_run_hit_rate == 1.0``,
+  ``second_run_timed_pairs == 0``).
+* ``rank_correlation`` — mean per-site Spearman correlation between
+  measured and analytic-model costs over the full action grid.  On CPU the
+  measured side is interpret-mode Pallas, so this tracks *agreement of
+  orderings* (what an argmin/agent consumes), not absolute times.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_measure`` (env
+``BENCH_FAST=1`` trims the grid; ``BENCH_MEASURE_OUT`` overrides the
+output path; ``BENCH_MEASURE_DB`` pins the DB file — default is a fresh
+temp file so the persistence proof starts cold).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core.env import CostModelEnv
+from repro.measure import MeasureRunner, make_measured_env
+from repro.models.compute import KernelSite
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_MEASURE_OUT", "BENCH_measure.json")
+REPS = 1 if FAST else 2
+
+# a deliberately small action space: the benchmark sweeps FULL grids, and
+# interpret-mode timing is seconds per pair — the integration/statistics
+# are identical at any scale
+CFG = NeuroVecConfig(
+    bm_choices=(8, 16, 32) if FAST else (8, 16, 32, 64),
+    bn_choices=(128,) if FAST else (128, 256),
+    bk_choices=(128,) if FAST else (128, 256),
+    bq_choices=(64, 128), bkv_choices=(64, 128),
+    chunk_choices=(32, 64) if FAST else (32, 64, 128),
+)
+
+
+def _sites():
+    s = [KernelSite(site="bm.mm0", kind="matmul", m=64, n=128, k=256),
+         KernelSite(site="bm.attn", kind="attention", m=128, n=64, k=128,
+                    batch=2, causal=True),
+         KernelSite(site="bm.scan", kind="chunk_scan", m=64, n=32, k=16,
+                    batch=2)]
+    if not FAST:
+        s.insert(1, KernelSite(site="bm.mm1", kind="matmul", m=128, n=256,
+                               k=128, dtype="float32"))
+    return s
+
+
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    """Spearman rho with average-tie ranks; nan if < 3 common entries."""
+    ok = np.isfinite(a) & np.isfinite(b)
+    if ok.sum() < 3:
+        return float("nan")
+    ra, rb = _avg_ranks(a[ok]), _avg_ranks(b[ok])
+    ra, rb = ra - ra.mean(), rb - rb.mean()
+    d = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / d) if d else float("nan")
+
+
+def _avg_ranks(x: np.ndarray) -> np.ndarray:
+    order = np.argsort(x, kind="stable")
+    ranks = np.empty(len(x), np.float64)
+    ranks[order] = np.arange(len(x), dtype=np.float64)
+    # average ranks within tied groups
+    xs = x[order]
+    i = 0
+    while i < len(xs):
+        j = i
+        while j + 1 < len(xs) and xs[j + 1] == xs[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = (i + j) / 2.0
+        i = j + 1
+    return ranks
+
+
+def run(db_path: str | None = None) -> dict:
+    db_path = db_path or os.environ.get("BENCH_MEASURE_DB") or \
+        os.path.join(tempfile.mkdtemp(prefix="bench_measure_"),
+                     "measure.jsonl")
+    sites = _sites()
+
+    # -- run 1: cold DB, every pair timed -----------------------------------
+    env1 = make_measured_env(CFG, db_path=db_path, reps=REPS, warmup=1)
+    t0 = time.perf_counter()
+    grid_meas = env1.cost_grid(sites)
+    wall1 = time.perf_counter() - t0
+    r1 = env1.measure_fn.runner
+
+    # -- run 2: fresh oracle + runner, same DB -> zero timings --------------
+    env2 = make_measured_env(CFG, db_path=db_path, reps=REPS, warmup=1)
+    t0 = time.perf_counter()
+    grid2 = env2.cost_grid(sites)
+    wall2 = time.perf_counter() - t0
+    r2, mf2 = env2.measure_fn.runner, env2.measure_fn
+    assert r2.timed_pairs == 0, "persistent DB failed: re-timed pairs"
+    np.testing.assert_allclose(grid2, grid_meas, rtol=0, atol=0)
+
+    # -- measured vs model rank agreement ------------------------------------
+    grid_model = CostModelEnv(CFG).cost_grid(sites)
+    rhos = [_spearman(grid_meas[i], grid_model[i])
+            for i in range(len(sites))]
+
+    results = {
+        "config": {"fast": FAST, "reps": REPS, "n_sites": len(sites),
+                   "grid_pairs": int(np.isfinite(grid_model).sum()),
+                   "backend": r1.backend_key, "db_path": db_path},
+        "timings": {"timed_pairs": r1.timed_pairs,
+                    "failed_pairs": r1.failed_pairs,
+                    "wall_s": wall1,
+                    "timings_per_s": r1.timed_pairs / wall1},
+        "cache": {"first_run_hit_rate": env1.measure_fn.hit_rate,
+                  "second_run_hit_rate": mf2.hit_rate,
+                  "second_run_timed_pairs": r2.timed_pairs,
+                  "second_run_wall_s": wall2,
+                  "cached_lookup_speedup": wall1 / max(wall2, 1e-9)},
+        "rank_correlation": {
+            # nan (undefined: <3 common grid entries) -> null, so the
+            # report stays strict JSON
+            "per_site": {s.site: (None if np.isnan(r) else r)
+                         for s, r in zip(sites, rhos)},
+            "mean_spearman": (float(np.mean(defined)) if
+                              (defined := [r for r in rhos
+                                           if not np.isnan(r)])
+                              else None)},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"bench_measure,timings_per_s,"
+          f"{results['timings']['timings_per_s']:.2f}")
+    print(f"bench_measure,second_run_hit_rate,"
+          f"{results['cache']['second_run_hit_rate']:.2f}")
+    rho = results["rank_correlation"]["mean_spearman"]
+    print(f"bench_measure,mean_spearman,"
+          f"{'undefined' if rho is None else format(rho, '.3f')}")
+    print(f"bench_measure,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

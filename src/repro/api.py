@@ -17,9 +17,12 @@ sources behind the :class:`Oracle` protocol::
 Swap ``agent="ppo"`` for any registry name (``dtree`` / ``nns`` /
 ``brute`` / ``random`` / ``polly`` / ``baseline``) and the rest of the
 code does not change; swap the default cost-model oracle for
-``oracle=MeasuredEnv(cfg, measure_fn=...)`` and rewards come from
-hardware timings instead of the analytic model — same protocol, same
-facade.
+``oracle="measured"`` (or a hand-built :class:`MeasuredEnv`) and rewards
+come from wall-clock timings of the compiled Pallas kernels instead of
+the analytic model — same protocol, same facade::
+
+    nv = NeuroVectorizer(cfg, agent="ppo", oracle="measured",
+                         db_path="measure.jsonl")   # persistent timings
 """
 from __future__ import annotations
 
@@ -38,12 +41,15 @@ from repro.core.extractor import extract_arch_sites, extract_sites
 from repro.core.protocols import Agent, Oracle
 from repro.core.vectorizer import (TileProgram, baseline_program, inject,
                                    program_speedup, tune, tune_step_fn)
+from repro.measure import (CachedMeasureFn, MeasureDB, MeasureRunner,
+                           make_measured_env)
 
 __all__ = [
     "NeuroVectorizer", "Agent", "Oracle", "AGENT_NAMES", "make_agent",
     "default_embed_fn",
     "NeuroVecConfig", "DEFAULT", "ActionSpace", "CostModelEnv",
     "MeasuredEnv", "set_strict_actions",
+    "MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_measured_env",
     "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
     "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
     "brute_force_action", "brute_force_labels", "brute_force_costs",
@@ -64,17 +70,42 @@ class NeuroVectorizer:
             constructed :class:`Agent`.  Extra ``agent_kwargs`` flow to
             ``make_agent`` (e.g. ``lr=``, ``mode=``, ``embed_fn=``).
     oracle: the reward source; defaults to the analytic
-            :class:`CostModelEnv`.  Pass a :class:`MeasuredEnv` to tune
-            against hardware timings.
+            :class:`CostModelEnv`.  Pass ``"measured"`` to compile and
+            time the Pallas kernels themselves
+            (:func:`repro.measure.make_measured_env` — real hardware on
+            TPU/GPU, interpret mode on CPU), ``"model"`` for the explicit
+            default, or any pre-built :class:`Oracle`.
+    db_path: persistent timing-DB path for ``oracle="measured"``
+            (repeat runs against the same path re-time nothing).
+    oracle_kwargs: extra :class:`repro.measure.MeasureRunner` options for
+            ``oracle="measured"`` (``reps=``, ``warmup=``, ``max_dim=``,
+            ``interpret=``...).
     """
 
     def __init__(self, cfg: NeuroVecConfig = DEFAULT,
                  agent: Union[str, Agent] = "ppo",
-                 oracle: Optional[Oracle] = None, seed: int = 0,
+                 oracle: Union[str, Oracle, None] = None, seed: int = 0,
+                 db_path: Optional[str] = None,
+                 oracle_kwargs: Optional[dict] = None,
                  **agent_kwargs):
         self.cfg = cfg
-        self.oracle: Oracle = (oracle if oracle is not None
-                               else CostModelEnv(cfg, seed=seed))
+        if oracle is None or oracle == "model":
+            if db_path is not None or oracle_kwargs:
+                raise ValueError(
+                    "db_path/oracle_kwargs apply only to oracle='measured'")
+            self.oracle: Oracle = CostModelEnv(cfg, seed=seed)
+        elif oracle == "measured":
+            self.oracle = make_measured_env(cfg, db_path=db_path,
+                                            seed=seed,
+                                            **(oracle_kwargs or {}))
+        elif isinstance(oracle, str):
+            raise ValueError(f"unknown oracle {oracle!r}: "
+                             f"expected 'model' or 'measured'")
+        else:
+            if db_path is not None or oracle_kwargs:
+                raise ValueError(
+                    "db_path/oracle_kwargs apply only to oracle='measured'")
+            self.oracle = oracle
         self.agent: Agent = (make_agent(agent, cfg, seed=seed,
                                         **agent_kwargs)
                              if isinstance(agent, str) else agent)

@@ -41,9 +41,11 @@ class TileProgram:
 def tune(sites: List[KernelSite], agent, space: ActionSpace) -> TileProgram:
     """Greedy (inference-mode) factor assignment for every site.
 
-    ``agent`` is any :class:`repro.core.protocols.Agent` — the duck-typed
-    callable fallback is gone; wrap ad-hoc policies via
-    ``make_agent`` or a tiny class with ``act``."""
+    ``agent`` must satisfy the :class:`repro.core.protocols.Agent`
+    protocol (``name`` / ``fit(sites, oracle)`` /
+    ``act(sites, sample=False)``) — the PR-2 protocol is mandatory and
+    the old ``hasattr`` duck-typing fallback is gone.  Get one from
+    ``repro.api.make_agent`` rather than hand-rolling."""
     if not sites:
         return TileProgram()
     actions = np.asarray(agent.act(sites, sample=False))

@@ -10,6 +10,10 @@ Tile tuning: ``--autotune brute`` plans tiles for the serving kernels with
 any registered agent (modelled speedup is printed); ``--tiles f.json``
 loads a saved :class:`~repro.api.TileProgram` instead; ``--inject`` routes
 the decode through the tuned Pallas kernels (interpret mode off-TPU).
+``--measured`` swaps the analytic reward oracle for compile-and-time
+measurement of the kernels themselves (``repro.measure``; native on
+TPU/GPU, interpret-mode with capped shapes on CPU) and ``--measure-db
+PATH`` persists the timings so repeat invocations re-time nothing.
 """
 from __future__ import annotations
 
@@ -40,17 +44,28 @@ def _tile_plan(args, model, params, batch, cache):
 
     if args.tiles:
         prog = api.TileProgram.load(args.tiles)
+        nv = None
     else:
-        nv = api.NeuroVectorizer(agent=args.autotune)
+        oracle_kw = {}
+        if args.measured:
+            oracle_kw = dict(oracle="measured", db_path=args.measure_db,
+                             oracle_kwargs=dict(reps=args.measure_reps))
+        nv = api.NeuroVectorizer(agent=args.autotune, **oracle_kw)
         fit_kw = ({"total_steps": args.autotune_steps}
                   if args.autotune == "ppo" else {})
         nv.fit(sites, **fit_kw)
         prog = nv.tune_sites(sites)
         if args.save_tiles:
             prog.save(args.save_tiles)
-    sp = api.program_speedup(prog, sites)
+    env = nv.oracle if nv is not None else None
+    sp = api.program_speedup(prog, sites, env)
+    how = "measured" if args.measured and nv is not None else "modelled"
     print(f"[serve] tile plan: {len(prog.tiles)} tiles over {len(sites)} "
-          f"sites, modelled speedup {sp:.2f}x")
+          f"sites, {how} speedup {sp:.2f}x")
+    if args.measured and nv is not None:
+        mf = env.measure_fn
+        print(f"[serve] measurements: {mf.runner.timed_pairs} timed, "
+              f"{mf.hits} DB hits ({mf.runner.backend_key})")
     return prog
 
 
@@ -69,11 +84,23 @@ def main(argv=None):
     ap.add_argument("--tiles", default=None,
                     help="load a saved TileProgram instead of tuning")
     ap.add_argument("--save-tiles", default=None)
+    ap.add_argument("--measured", action="store_true",
+                    help="tune against wall-clock kernel timings "
+                         "(repro.measure) instead of the analytic model")
+    ap.add_argument("--measure-db", default=None,
+                    help="persistent measurement-DB path (repeat runs "
+                         "against the same path re-time nothing)")
+    ap.add_argument("--measure-reps", type=int, default=3,
+                    help="timing repetitions per (site, tile) pair")
     ap.add_argument("--inject", action="store_true",
                     help="run decode through the tuned Pallas kernels")
     args = ap.parse_args(argv)
     if args.inject and not (args.autotune or args.tiles):
         ap.error("--inject requires a tile plan: pass --autotune or --tiles")
+    if args.measured and (args.tiles or not args.autotune):
+        ap.error("--measured requires --autotune and no --tiles (it "
+                 "changes the tuning oracle; --tiles loads a finished "
+                 "plan)")
 
     cfg = get_config(args.arch)
     if not args.full:

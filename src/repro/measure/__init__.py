@@ -1,0 +1,54 @@
+"""``repro.measure`` — the hardware measurement subsystem.
+
+Closes the paper's loop: the reward signal becomes *measured execution
+time* of the compiled Pallas kernels (eq. 2) instead of the analytic
+stand-in.  Three layers:
+
+* :mod:`repro.measure.timing` — the one median-of-reps timing loop every
+  consumer shares (runner + benchmarks).
+* :mod:`repro.measure.runner` — :class:`MeasureRunner`, the batched
+  compile-and-time ``measure_fn`` (real kernels on TPU/GPU, interpret-mode
+  Pallas on CPU so CI runs the full loop; per-tile failures fail closed).
+* :mod:`repro.measure.db` — :class:`MeasureDB`, the persistent JSONL
+  timing store + :class:`CachedMeasureFn` gluing runner and DB into the
+  oracle hook (repeat autotune runs re-time nothing).
+
+:func:`make_measured_env` assembles the stack into a ready
+:class:`~repro.core.env.MeasuredEnv` — what
+``NeuroVectorizer(cfg, oracle="measured")`` constructs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.measure.db import CachedMeasureFn, MeasureDB, make_key
+from repro.measure.runner import (MeasureRunner, default_interpret,
+                                  device_kind)
+from repro.measure import timing
+
+__all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
+           "make_measured_env", "default_interpret", "device_kind",
+           "timing"]
+
+
+def make_measured_env(cfg=None, db_path: Optional[str] = None,
+                      runner: Optional[MeasureRunner] = None,
+                      seed: int = 0, **runner_kwargs):
+    """A :class:`~repro.core.env.MeasuredEnv` wired to a real runner.
+
+    ``db_path`` enables the persistent timing DB (a second run against the
+    same path performs zero timings); extra kwargs construct the default
+    :class:`MeasureRunner` (``reps=``, ``warmup=``, ``interpret=``,
+    ``max_dim=``...).  The assembled hook is reachable as
+    ``env.measure_fn`` (`.runner` / `.db` for stats and counters).
+    """
+    from repro.configs.neurovec import DEFAULT
+    from repro.core.env import MeasuredEnv
+
+    if runner is None:
+        runner = MeasureRunner(**runner_kwargs)
+    elif runner_kwargs:
+        raise TypeError("pass either runner= or runner kwargs, not both")
+    db = MeasureDB(db_path) if db_path else None
+    return MeasuredEnv(cfg if cfg is not None else DEFAULT,
+                       measure_fn=CachedMeasureFn(runner, db), seed=seed)

@@ -1,0 +1,153 @@
+"""Persistent measurement database — timings survive the process.
+
+Autotuning repeatedly prices the same ``(site, tile)`` pairs: PPO resamples
+them across epochs, brute force sweeps the full grid, and every re-run of a
+tuning job starts from zero.  :class:`~repro.core.env.MeasuredEnv` already
+deduplicates *within* a process; this module is the layer below it —
+an append-only JSON-lines store keyed by
+``(site.key(), tiles, backend_key)`` where ``backend_key`` fingerprints
+the measurement conditions (backend, device kind, interpret caps, jax
+version), so a cache entry is only ever served back under the conditions
+that produced it.  A second autotune run against the same DB path performs
+zero kernel timings (proven by ``benchmarks/bench_measure.py``).
+
+Robustness: lines that fail to parse (truncated writes, manual edits) are
+skipped and counted, never fatal — the DB degrades to re-measuring.
+Failed measurements are stored as ``null`` (strict JSON) and round-trip
+back to ``inf``, so known-bad tiles are not re-timed either.
+
+:class:`CachedMeasureFn` composes a :class:`~repro.measure.runner.
+MeasureRunner` with a DB into the batched ``measure_fn`` hook the oracle
+consumes, tracking hit/miss statistics for the benchmark report.
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def make_key(site_key: str, tiles, backend: str) -> str:
+    t = tuple(int(x) for x in tiles)
+    return f"{site_key}|{t[0]}x{t[1]}x{t[2]}|{backend}"
+
+
+class MeasureDB:
+    """Append-only JSONL timing store with an in-process LRU on top.
+
+    ``max_entries`` bounds the in-memory map only (LRU eviction); the
+    on-disk log keeps everything and duplicate keys resolve last-wins on
+    load, so an evicted-then-remeasured pair stays consistent.
+    """
+
+    def __init__(self, path: str, max_entries: Optional[int] = None):
+        self.path = path
+        self.max_entries = max_entries
+        self._mem: "OrderedDict[str, float]" = OrderedDict()
+        self.skipped_lines = 0          # corrupt/garbage lines ignored
+        self._fh = None
+        self._load()
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    key = rec["k"]
+                    val = float("inf") if rec["v"] is None else float(rec["v"])
+                except (ValueError, KeyError, TypeError):
+                    self.skipped_lines += 1
+                    continue
+                self._remember(key, val)
+
+    def _remember(self, key: str, val: float) -> None:
+        self._mem[key] = val
+        self._mem.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._mem) > self.max_entries:
+                self._mem.popitem(last=False)
+
+    def _append(self, key: str, val: float) -> None:
+        if self._fh is None:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            self._fh = open(self.path, "a")
+        rec = {"k": key, "v": None if not np.isfinite(val) else val}
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- mapping -------------------------------------------------------------
+    def get(self, key: str) -> Optional[float]:
+        v = self._mem.get(key)
+        if v is not None:
+            self._mem.move_to_end(key)
+        return v
+
+    def put(self, key: str, val: float) -> None:
+        self._append(key, val)
+        self._remember(key, val)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+
+class CachedMeasureFn:
+    """DB-backed batched ``measure_fn``: time only what the DB lacks.
+
+    ``runner`` is any batched ``(sites, tiles) -> (n,) seconds`` callable
+    exposing ``backend_key`` (a :class:`MeasureRunner` in production, a
+    counting spy in tests); ``db=None`` disables persistence but keeps the
+    statistics, so callers can always report a hit rate.
+    """
+
+    def __init__(self, runner, db: Optional[MeasureDB] = None):
+        self.runner = runner
+        self.db = db
+        self.hits = 0                   # pairs served from the DB
+        self.misses = 0                 # pairs timed by the runner
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def __call__(self, sites: Sequence, tiles) -> np.ndarray:
+        tiles = np.asarray(tiles, np.int64)
+        backend = getattr(self.runner, "backend_key", "unknown")
+        out = np.empty(len(sites), np.float64)
+        miss = []
+        for i, (s, t) in enumerate(zip(sites, tiles)):
+            v = self.db.get(make_key(s.key(), t, backend)) \
+                if self.db is not None else None
+            if v is None:
+                miss.append(i)
+            else:
+                out[i] = v
+                self.hits += 1
+        if miss:
+            vals = np.asarray(self.runner([sites[i] for i in miss],
+                                          tiles[miss]), np.float64)
+            for i, v in zip(miss, vals):
+                if self.db is not None:
+                    self.db.put(make_key(sites[i].key(), tiles[i], backend),
+                                float(v))
+                out[i] = v
+            self.misses += len(miss)
+        return out

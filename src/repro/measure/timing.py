@@ -1,0 +1,71 @@
+"""Shared wall-clock timing primitives — ONE median-of-reps loop.
+
+Every timing consumer in the repo (the hardware :class:`MeasureRunner`,
+``benchmarks/bench_env.py``, ``benchmarks/bench_measure.py``) routes
+through these two helpers instead of hand-rolling its own loop, so the
+methodology — warmup to exclude compile/cache effects, ``block_until_ready``
+on device values, median over repetitions — is defined exactly once.
+
+* :func:`median_time` — seconds per call of one function (the measurement
+  primitive: warmup + median of ``reps``).
+* :func:`interleaved_medians` — A/B comparison timing that alternates the
+  two functions each repetition, cancelling slow drift in shared-container
+  load (the ``bench_env`` methodology).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+
+def _block(x) -> None:
+    """Synchronize on a (possibly nested) jax result; no-op for host values."""
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except ImportError:                          # host-only timing consumer
+        pass
+
+
+def median_time(fn: Callable[[], object], *, reps: int = 5,
+                warmup: int = 1) -> float:
+    """Median wall-clock seconds per call of ``fn()``.
+
+    ``warmup`` calls run first (compile + cache fill) and are discarded;
+    each timed call blocks on its result so async dispatch cannot hide
+    device time.  ``reps`` must be >= 1.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    for _ in range(warmup):
+        _block(fn())
+    ts = np.empty(reps, np.float64)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        _block(fn())
+        ts[i] = time.perf_counter() - t0
+    return float(np.median(ts))
+
+
+def interleaved_medians(fn_a: Callable[[], object],
+                        fn_b: Callable[[], object], *,
+                        reps: int = 5) -> Tuple[float, float]:
+    """Median seconds per call of two functions, interleaved A/B/A/B...
+
+    Interleaving cancels slow drift in background load (each rep of A has
+    a neighbouring rep of B under the same conditions), which is why the
+    benchmark speedup ratios use this rather than two back-to-back
+    :func:`median_time` calls.  Callers warm both paths themselves (the
+    first call often carries compile/caching work worth asserting on).
+    """
+    ta, tb = np.empty(reps, np.float64), np.empty(reps, np.float64)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        _block(fn_a())
+        ta[i] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _block(fn_b())
+        tb[i] = time.perf_counter() - t0
+    return float(np.median(ta)), float(np.median(tb))

@@ -232,6 +232,94 @@ def test_program_speedup_excludes_failed_baseline_sites():
     assert np.isfinite(sp) and sp == pytest.approx(1.0, rel=1e-9)
 
 
+def test_measured_env_real_runner_conformance(tmp_path):
+    """The PR-3 acceptance seam: MeasuredEnv with the REAL MeasureRunner
+    (interpret mode) — Oracle-conformant, finite rewards, model-illegal
+    tiles never executed."""
+    from repro.measure import make_measured_env
+
+    cfg = NeuroVecConfig(bm_choices=(16, 32), bn_choices=(128,),
+                         bk_choices=(128,), bq_choices=(64,),
+                         bkv_choices=(128,), chunk_choices=(32,))
+    env = make_measured_env(cfg, db_path=str(tmp_path / "m.jsonl"),
+                            reps=1, warmup=1, interpret=True, max_dim=64)
+    assert isinstance(env, Oracle)
+
+    small = [KernelSite(site="r.mm", kind="matmul", m=32, n=128, k=128),
+             KernelSite(site="r.at", kind="attention", m=64, n=32, k=64,
+                        batch=2, causal=True)]
+    acts = np.array([[0, 0, 0], [0, 0, 0]])
+    r = env.rewards_batch(small, acts)
+    assert r.shape == (2,) and np.isfinite(r).all()
+    assert (env.speedups_batch(small, acts) > 0).all()
+
+    # a model-illegal (VMEM-overflow) tile is never built or timed: with
+    # this action space every action decodes to the illegal top-corner
+    # tile, so only the site's legal baseline pair may reach the runner
+    big = KernelSite(site="r.big", kind="matmul", m=65536, n=16384,
+                     k=16384)
+    bad_cfg = NeuroVecConfig(bm_choices=(512,), bn_choices=(512,),
+                             bk_choices=(4096,))
+    bad_env = make_measured_env(bad_cfg, reps=1, warmup=1, interpret=True,
+                                max_dim=64)
+    assert bad_env.rewards_batch([big], np.array([[0, 0, 0]]))[0] \
+        == bad_cfg.fail_penalty
+    attempted = (bad_env.measure_fn.runner.timed_pairs
+                 + bad_env.measure_fn.runner.failed_pairs)
+    assert attempted == 1               # the baseline only — never the tile
+
+
+def test_measured_env_real_runner_failure_fails_closed():
+    """A kernel that dies at build/compile/run time (not merely
+    model-illegal) must come back as the penalty, not poison the batch."""
+    from repro.measure import MeasureRunner
+    from repro.measure.db import CachedMeasureFn
+
+    class ExplodingRunner(MeasureRunner):
+        def _build(self, site, tiles):
+            if site.site == "r.boom":
+                raise RuntimeError("simulated compile failure")
+            return super()._build(site, tiles)
+
+    cfg = NeuroVecConfig(bm_choices=(16,), bn_choices=(128,),
+                         bk_choices=(128,), bq_choices=(64,),
+                         bkv_choices=(128,), chunk_choices=(32,))
+    runner = ExplodingRunner(reps=1, warmup=1, interpret=True, max_dim=64)
+    m = MeasuredEnv(cfg, measure_fn=CachedMeasureFn(runner))
+    boom = KernelSite(site="r.boom", kind="matmul", m=32, n=128, k=128)
+    ok = KernelSite(site="r.ok", kind="matmul", m=32, n=128, k=128)
+    r = m.rewards_batch([boom, ok], np.zeros((2, 3), np.int64))
+    assert r[0] == cfg.fail_penalty     # baseline failed -> site fails closed
+    assert np.isfinite(r).all()
+    assert runner.failed_pairs >= 1 and runner.timed_pairs >= 1
+    sp = m.speedups_batch([boom, ok], np.zeros((2, 3), np.int64))
+    assert sp[0] == pytest.approx(1.0 / cfg.illegal_slowdown)
+    assert np.isfinite(sp).all()
+
+
+def test_facade_measured_oracle_string(tmp_path):
+    """``NeuroVectorizer(cfg, oracle="measured")`` assembles the stack."""
+    from repro.measure.db import CachedMeasureFn
+
+    cfg = NeuroVecConfig(bm_choices=(16, 32), bn_choices=(128,),
+                         bk_choices=(128,), bq_choices=(64,),
+                         bkv_choices=(128,), chunk_choices=(32,))
+    nv = NeuroVectorizer(cfg, agent="brute", oracle="measured",
+                         db_path=str(tmp_path / "m.jsonl"),
+                         oracle_kwargs=dict(reps=1, warmup=1,
+                                            interpret=True, max_dim=64))
+    assert isinstance(nv.oracle, MeasuredEnv)
+    assert isinstance(nv.oracle.measure_fn, CachedMeasureFn)
+    sites = [KernelSite(site="f.mm", kind="matmul", m=32, n=128, k=128)]
+    prog = nv.fit(sites).tune_sites(sites)
+    assert len(prog.tiles) == 1
+    assert nv.oracle.measure_fn.runner.timed_pairs > 0
+    with pytest.raises(ValueError, match="unknown oracle"):
+        NeuroVectorizer(cfg, oracle="wat")
+    with pytest.raises(ValueError, match="oracle='measured'"):
+        NeuroVectorizer(cfg, oracle="model", db_path="x")
+
+
 def test_brute_agent_works_against_measured_oracle():
     # same protocol => brute force can exhaustively 'measure' hardware
     m = MeasuredEnv(NV, measure_fn=lambda sites, tiles: np.asarray(

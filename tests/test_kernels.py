@@ -1,5 +1,13 @@
 """Per-kernel allclose sweeps + hypothesis property tests vs ref.py oracles
-(interpret mode executes the kernel bodies in Python on CPU)."""
+(interpret mode executes the kernel bodies in Python on CPU).
+
+Includes the action-space correctness sweeps: every *distinct effective*
+tile the DEFAULT NeuroVec action grid can produce on a test shape (after
+the kernels' internal clamping) is executed once against the pure-jnp
+oracle — the guard for every tile the measurement runner
+(``repro.measure``) will ever compile and time."""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +18,9 @@ try:                                   # property-based when available ...
 except ImportError:                    # ... deterministic sweep on bare envs
     from _hypothesis_compat import given, settings, st
 
+from repro.configs.neurovec import DEFAULT as NV
 from repro.kernels import ops, ref
+from repro.kernels.matmul import _ceil_mult
 
 
 def _rel_err(a, b):
@@ -131,6 +141,79 @@ def test_chunk_scan_chunk_invariance():
             for c in (8, 16, 64)]
     for o in outs[1:]:
         assert _rel_err(o, outs[0]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# action-space sweeps: the full DEFAULT tile grid, deduplicated by the
+# kernels' internal clamping (what the measurement runner executes)
+# ---------------------------------------------------------------------------
+
+# non-pow2 test shape: stresses padding under every tile
+_MM_SHAPE = (48, 160, 136)
+
+
+def _mm_sweep():
+    M, N, K = _MM_SHAPE
+    eff = {(min(bm, _ceil_mult(M, 8)), min(bn, _ceil_mult(N, 128)),
+            min(bk, _ceil_mult(K, 128)))
+           for bm, bn, bk in itertools.product(
+               NV.bm_choices, NV.bn_choices, NV.bk_choices)}
+    return sorted(eff)
+
+
+@pytest.mark.parametrize("tiles", _mm_sweep())
+def test_matmul_action_space_sweep(tiles):
+    M, N, K = _MM_SHAPE
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    w = jax.random.normal(k2, (K, N), jnp.float32)
+    y = ops.matmul(x, w, tiles=tiles, interpret=True)
+    assert y.shape == (M, N)
+    assert _rel_err(y, ref.matmul_ref(x, w)) < 1e-5
+
+
+# Sq == Skv: the causal semantics the kernel and the oracle share (all
+# causal Pallas sites are self-attention; Sq==1 decode never hits Pallas)
+_ATTN_SQ, _ATTN_SKV, _ATTN_D = 256, 256, 64
+
+
+def _attn_sweep():
+    eff = {(min(bq, _ATTN_SQ), min(bkv, _ATTN_SKV))
+           for bq, bkv in itertools.product(NV.bq_choices, NV.bkv_choices)}
+    return sorted(eff)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("tiles", _attn_sweep())
+def test_attention_action_space_sweep(tiles, causal):
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, _ATTN_SQ, _ATTN_D))
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 2, _ATTN_SKV, _ATTN_D))
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (1, 2, _ATTN_SKV, _ATTN_D))
+    y = ops.flash_attention(q, k, v, causal=causal,
+                            scale=_ATTN_D ** -0.5, tiles=tiles,
+                            interpret=True)
+    yr = ref.attention_ref(q, k, v, causal=causal, scale=_ATTN_D ** -0.5)
+    assert float(jnp.max(jnp.abs(y - yr))) < 2e-5
+
+
+_SCAN_S = 128
+
+
+@pytest.mark.parametrize("chunk",
+                         sorted({min(c, _SCAN_S) for c in NV.chunk_choices}))
+def test_chunk_scan_action_space_sweep(chunk):
+    key = jax.random.PRNGKey(11)
+    G, S, P, N = 2, _SCAN_S, 32, 16
+    x = jax.random.normal(key, (G, S, P))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (G, S, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 2), (G, S, N)) * 0.3
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                            (G, S)))
+    y = ops.chunk_scan(x, Bm, Cm, la, chunk=chunk, interpret=True)
+    assert _rel_err(y, ref.chunk_scan_ref(x, Bm, Cm, la)) < 1e-4
 
 
 # ---------------------------------------------------------------------------
