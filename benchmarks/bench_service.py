@@ -1,0 +1,143 @@
+"""Benchmark of the measurement-transport layer (``repro.measure`` pool).
+
+Writes ``BENCH_service.json`` with the numbers the ROADMAP's
+serving-scale story cares about:
+
+* ``throughput`` — timings/s through ``WorkerPoolTransport`` at
+  workers=1,2,4, each against a cold DB over the same pair set (compile
+  + warmup included; worker spawn cost reported separately so the
+  steady-state rate is visible).
+* ``coalesce`` — duplicate-submission absorption: every pair submitted
+  twice in flight, ``coalesce_rate = coalesced / submitted`` (0.5 is
+  perfect absorption).
+* ``cache`` — the cross-transport persistence proof: a second, in-process
+  pass over a pool-populated DB performs zero timings.
+
+Interpret-mode timings on CPU are a throughput *proxy* (grid-size
+scaling, not MXU behaviour) — exactly enough to track the transport
+overhead trajectory per PR.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_service`` (env
+``BENCH_FAST=1`` trims the pair set; ``BENCH_SERVICE_OUT`` overrides the
+output path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.measure import InProcessTransport, MeasureRunner, MeasureDB, \
+    WorkerPoolTransport
+from repro.models.compute import KernelSite
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_SERVICE_OUT", "BENCH_service.json")
+WORKER_COUNTS = (1, 2, 4)
+RUNNER_KW = dict(reps=1, warmup=1, interpret=True, max_dim=32, max_batch=2)
+
+
+def _pairs():
+    """A flat list of distinct (site, tiles) measurement pairs."""
+    mm = [KernelSite(site=f"bs.mm{i}", kind="matmul", m=32 * (i + 1),
+                     n=128, k=128) for i in range(2 if FAST else 4)]
+    at = [KernelSite(site="bs.attn", kind="attention", m=64, n=32, k=64,
+                     batch=2, causal=True)]
+    sc = [KernelSite(site="bs.scan", kind="chunk_scan", m=32, n=16, k=8,
+                     batch=2)]
+    pairs = []
+    for s in mm:
+        for bm in ((8, 16) if FAST else (8, 16, 32)):
+            pairs.append((s, (bm, 128, 128)))
+    for s in at:
+        for bq in (32, 64):
+            pairs.append((s, (bq, 64, 1)))
+    for s in sc:
+        for q in (16, 32):
+            pairs.append((s, (q, 1, 1)))
+    return pairs
+
+
+def _submit_all(transport, pairs, dup: int = 1):
+    sites = [s for s, _ in pairs] * dup
+    tiles = np.array([t for _, t in pairs] * dup, np.int64)
+    futs = transport.submit(sites, tiles)
+    transport.drain()
+    return [f.result() for f in futs]
+
+
+def run() -> dict:
+    pairs = _pairs()
+    tmp = tempfile.mkdtemp(prefix="bench_service_")
+    throughput = {}
+    db_for_cache = None
+    for w in WORKER_COUNTS:
+        db = os.path.join(tmp, f"measure_w{w}.jsonl")
+        t0 = time.perf_counter()
+        pool = WorkerPoolTransport(workers=w, db=db, runner_kwargs=RUNNER_KW)
+        spawn_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _submit_all(pool, pairs)
+        wall = time.perf_counter() - t0
+        st = pool.stats()
+        pool.close()
+        assert st["timed_pairs"] == len(pairs), st
+        throughput[f"workers_{w}"] = {
+            "timed_pairs": st["timed_pairs"], "wall_s": wall,
+            "spawn_s": spawn_s, "timings_per_s": st["timed_pairs"] / wall}
+        db_for_cache = db
+    base = throughput[f"workers_{WORKER_COUNTS[0]}"]["timings_per_s"]
+
+    # -- coalesce rate: every pair submitted twice in one batch -------------
+    pool = WorkerPoolTransport(workers=2, runner_kwargs=RUNNER_KW)
+    _submit_all(pool, pairs, dup=2)
+    st = pool.stats()
+    pool.close()
+    submitted = st["misses"] + st["coalesced"] + st["hits"]
+    coalesce = {"submitted": submitted, "coalesced": st["coalesced"],
+                "timed_pairs": st["timed_pairs"],
+                "coalesce_rate": st["coalesced"] / submitted}
+    assert st["timed_pairs"] == len(pairs), st
+
+    # -- cross-transport persistence: pool-written DB, in-process reader ----
+    inproc = InProcessTransport(MeasureRunner(**RUNNER_KW),
+                                MeasureDB(db_for_cache))
+    _submit_all(inproc, pairs)
+    st2 = inproc.stats()
+    inproc.close()
+    assert st2["timed_pairs"] == 0, st2
+
+    results = {
+        "config": {"fast": FAST, "n_pairs": len(pairs),
+                   "runner": RUNNER_KW, "worker_counts": WORKER_COUNTS,
+                   # pool scaling is bounded by host cores: interpret-mode
+                   # measurement is CPU-bound, so expect flat/negative
+                   # scaling once workers exceed free cores
+                   "cpu_count": os.cpu_count()},
+        "throughput": throughput,
+        "scaling": {f"speedup_w{w}_vs_w{WORKER_COUNTS[0]}":
+                    throughput[f"workers_{w}"]["timings_per_s"] / base
+                    for w in WORKER_COUNTS[1:]},
+        "coalesce": coalesce,
+        "cache": {"second_pass_timed_pairs": st2["timed_pairs"],
+                  "second_pass_hit_rate": st2["hit_rate"]},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    for w in WORKER_COUNTS:
+        print(f"bench_service,timings_per_s_w{w},"
+              f"{throughput[f'workers_{w}']['timings_per_s']:.2f}")
+    print(f"bench_service,coalesce_rate,{coalesce['coalesce_rate']:.2f}")
+    print(f"bench_service,second_pass_hit_rate,"
+          f"{st2['hit_rate']:.2f}")
+    print(f"bench_service,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

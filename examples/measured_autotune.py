@@ -8,11 +8,14 @@ mode with capped shapes, so this exact script is the CI smoke for the
 whole measure→reward→train→deploy chain.
 
     PYTHONPATH=src python examples/measured_autotune.py \
-        [--steps 96] [--db /tmp/measure.jsonl] [--agent ppo]
+        [--steps 96] [--db /tmp/measure.jsonl] [--agent ppo] \
+        [--transport pool --workers 2]
 
 Run it twice with the same ``--db`` and the second run performs zero
 kernel timings — every (site, tile) pair is served from the persistent
-measurement database.
+measurement database (under either transport: the pool streams its
+results into the same DB).  For the session-oriented service on top,
+see ``examples/service_autotune.py``.
 """
 import argparse
 import sys
@@ -53,6 +56,12 @@ def main(argv=None):
                     help="persistent measurement-DB path")
     ap.add_argument("--reps", type=int, default=1,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--transport", choices=("inproc", "pool"),
+                    default="inproc",
+                    help="measure in this process or across a subprocess "
+                         "worker pool")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="pool size for --transport pool")
     ap.add_argument("--out", default="/tmp/repro_measured_tiles.json")
     args = ap.parse_args(argv)
 
@@ -61,10 +70,13 @@ def main(argv=None):
     cfg = small_cfg()
     sites = demo_sites()
     nv = NeuroVectorizer(cfg, agent=args.agent, oracle="measured", seed=0,
-                         db_path=args.db,
+                         db_path=args.db, transport=args.transport,
+                         workers=(args.workers
+                                  if args.transport == "pool" else None),
                          oracle_kwargs=dict(reps=args.reps, warmup=1))
     print(f"== fit {args.agent} vs measured oracle "
-          f"({nv.oracle.measure_fn.runner.backend_key}) ==")
+          f"(transport={args.transport}, "
+          f"{nv.oracle.measure_fn.transport.backend_key}) ==")
     fit_kw = ({"total_steps": args.steps} if args.agent == "ppo" else {})
     nv.fit(sites, **fit_kw)
 
@@ -72,16 +84,18 @@ def main(argv=None):
     assert isinstance(prog, TileProgram) and len(prog.tiles) == len(sites)
     prog.save(args.out)
 
-    mf = nv.oracle.measure_fn
     print(f"tuned {len(prog.tiles)} sites -> {args.out}")
     for k, t in prog.tiles.items():
         print(f"  {k}: tiles={t}")
     print(f"measured speedup vs heuristic baseline: "
           f"{nv.speedup(prog, sites):.2f}x")
-    print(f"measurements: {mf.runner.timed_pairs} timed, "
-          f"{mf.hits} DB hits, {mf.misses} misses "
-          f"(hit rate {mf.hit_rate:.2f}) — rerun with the same --db "
+    st = nv.oracle.measure_fn.transport.stats()
+    print(f"measurements: {st['timed_pairs']} timed, "
+          f"{st['hits']} DB hits, {st['misses']} misses, "
+          f"{st['coalesced']} coalesced "
+          f"(hit rate {st['hit_rate']:.2f}) — rerun with the same --db "
           f"and timed goes to 0")
+    nv.close()                 # release pool workers / the DB file handle
     return prog
 
 

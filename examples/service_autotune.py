@@ -1,0 +1,79 @@
+"""Service-oriented autotuning: concurrent sessions over one worker pool.
+
+``repro.service.TuningService`` owns a shared measurement transport —
+here a ``WorkerPoolTransport`` fanning (site, tiles) batches out to N
+subprocess workers — and hands out sessions, each pairing an agent with
+an oracle view.  Two sessions tune below (PPO trained on measured
+rewards, and brute force sweeping the same grid *concurrently*); their
+overlapping (site, tiles) keys coalesce inside the transport and every
+timing streams into one persistent ``MeasureDB``.
+
+    PYTHONPATH=src python examples/service_autotune.py \
+        [--workers 2] [--db /tmp/service_measure.jsonl] [--steps 48]
+
+Run it twice with the same ``--db`` and the second run performs zero
+kernel timings — the CI smoke for the whole service→pool→DB chain.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "examples")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker-pool size (subprocesses)")
+    ap.add_argument("--db", default="/tmp/repro_service_measure.jsonl",
+                    help="persistent measurement-DB path shared by every "
+                         "session")
+    ap.add_argument("--steps", type=int, default=48,
+                    help="PPO environment steps for the RL session")
+    ap.add_argument("--reps", type=int, default=1,
+                    help="timing repetitions per (site, tile) pair")
+    args = ap.parse_args(argv)
+
+    from measured_autotune import demo_sites, small_cfg
+    from repro.api import TileProgram, TuningService
+
+    cfg = small_cfg()
+    sites = demo_sites()
+
+    with TuningService(cfg, transport="pool", workers=args.workers,
+                       db_path=args.db, reps=args.reps, warmup=1) as svc:
+        print(f"== TuningService: pool of {args.workers} workers "
+              f"({svc.transport.backend_key}) ==")
+        rl = svc.open_session(agent="ppo", oracle="measured")
+        sweep = svc.open_session(agent="brute", oracle="measured")
+
+        # brute's exhaustive grid sweep measures concurrently with PPO
+        # training — overlapping pairs coalesce inside the transport
+        sweep_fut = sweep.fit(sites).tune_async(sites)
+        rl.fit(sites, total_steps=args.steps)
+        rl_prog = rl.tune(sites)
+        sweep_prog = sweep_fut.result()
+        assert isinstance(rl_prog, TileProgram)
+        assert len(rl_prog.tiles) == len(sweep_prog.tiles) == len(sites)
+
+        for handle, prog in ((rl, rl_prog), (sweep, sweep_prog)):
+            s = handle.stats()
+            print(f"[{s['session']}] agent={s['agent']} "
+                  f"tunes={s['tunes']} sites={s['sites_tuned']} "
+                  f"fit {s['fit_wall_s']:.2f}s tune {s['tune_wall_s']:.2f}s "
+                  f"| transport Δ: {s['transport']['timed_pairs']} timed, "
+                  f"{s['transport']['hits']} hits, "
+                  f"{s['transport']['coalesced']} coalesced")
+        for k in sorted(sweep_prog.tiles):
+            print(f"  {k}: rl={rl_prog.tiles[k]} brute={sweep_prog.tiles[k]}")
+
+        st = svc.transport.stats()
+    print(f"measurements: {st['timed_pairs']} timed, {st['hits']} DB hits, "
+          f"{st['coalesced']} coalesced, {st['retries']} retries "
+          f"across {st['workers']} workers — rerun with the same --db "
+          f"and timed goes to 0")
+    return rl_prog, sweep_prog
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,11 @@ come from wall-clock timings of the compiled Pallas kernels instead of
 the analytic model — same protocol, same facade::
 
     nv = NeuroVectorizer(cfg, agent="ppo", oracle="measured",
-                         db_path="measure.jsonl")   # persistent timings
+                         db_path="measure.jsonl",   # persistent timings
+                         transport="pool", workers=4)   # N-worker pool
+
+For many concurrent tuning sessions over one shared worker pool, move up
+one altitude to :class:`repro.service.TuningService`.
 """
 from __future__ import annotations
 
@@ -38,11 +42,15 @@ from repro.core.agents import (AGENT_NAMES, BaselineHeuristicAgent,
 from repro.core.env import (ActionSpace, CostModelEnv, MeasuredEnv,
                             set_strict_actions)
 from repro.core.extractor import extract_arch_sites, extract_sites
-from repro.core.protocols import Agent, Oracle
+from repro.core.protocols import (Agent, AsyncOracle, MeasureTransport,
+                                  Oracle)
 from repro.core.vectorizer import (TileProgram, baseline_program, inject,
                                    program_speedup, tune, tune_step_fn)
-from repro.measure import (CachedMeasureFn, MeasureDB, MeasureRunner,
-                           make_measured_env)
+from repro.measure import (TRANSPORT_NAMES, CachedMeasureFn,
+                           InProcessTransport, MeasureDB, MeasureRunner,
+                           TransportMeasureFn, WorkerPoolTransport,
+                           make_measured_env, make_transport)
+from repro.service import SessionHandle, TuningService
 
 __all__ = [
     "NeuroVectorizer", "Agent", "Oracle", "AGENT_NAMES", "make_agent",
@@ -50,6 +58,9 @@ __all__ = [
     "NeuroVecConfig", "DEFAULT", "ActionSpace", "CostModelEnv",
     "MeasuredEnv", "set_strict_actions",
     "MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_measured_env",
+    "MeasureTransport", "AsyncOracle", "InProcessTransport",
+    "WorkerPoolTransport", "TransportMeasureFn", "make_transport",
+    "TRANSPORT_NAMES", "TuningService", "SessionHandle",
     "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
     "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
     "brute_force_action", "brute_force_labels", "brute_force_costs",
@@ -62,6 +73,26 @@ __all__ = [
 class NeuroVectorizer:
     """The end-to-end facade: extract → fit → tune → inject.
 
+    The reward source and its execution backend compose as a matrix —
+    every cell speaks the same :class:`Oracle` protocol, so agents and
+    the rest of the pipeline never branch on the choice:
+
+    ==================  ======================  ===========================
+    ``oracle=``         ``transport=``          rewards come from
+    ==================  ======================  ===========================
+    ``None`` / "model"  (must be unset)         the analytic cost model,
+                                                ``CostModelEnv``
+    ``"measured"``      ``None`` / "inproc"     wall-clock kernel timings
+                                                in *this* process
+    ``"measured"``      "pool", ``workers=N``   timings fanned out to N
+                                                subprocess workers
+                                                (``WorkerPoolTransport``)
+    ``"measured"``      a ``MeasureTransport``  timings through your
+                                                transport (borrowed — the
+                                                facade won't close it)
+    an ``Oracle``       (must be unset)         your oracle, verbatim
+    ==================  ======================  ===========================
+
     Parameters
     ----------
     cfg:    the :class:`NeuroVecConfig` (action space, PPO and penalty
@@ -69,17 +100,22 @@ class NeuroVectorizer:
     agent:  a registry name (``"ppo"``, ``"brute"``, ...) or an already
             constructed :class:`Agent`.  Extra ``agent_kwargs`` flow to
             ``make_agent`` (e.g. ``lr=``, ``mode=``, ``embed_fn=``).
-    oracle: the reward source; defaults to the analytic
-            :class:`CostModelEnv`.  Pass ``"measured"`` to compile and
-            time the Pallas kernels themselves
-            (:func:`repro.measure.make_measured_env` — real hardware on
-            TPU/GPU, interpret mode on CPU), ``"model"`` for the explicit
-            default, or any pre-built :class:`Oracle`.
+    oracle: a row of the matrix above.  ``"measured"`` assembles
+            :func:`repro.measure.make_measured_env` — real hardware on
+            TPU/GPU, interpret-mode Pallas on CPU.
+    transport: a column of the matrix above (``oracle="measured"`` only).
+    workers: pool size for ``transport="pool"``.
     db_path: persistent timing-DB path for ``oracle="measured"``
-            (repeat runs against the same path re-time nothing).
+            (repeat runs against the same path re-time nothing — under
+            any transport).
     oracle_kwargs: extra :class:`repro.measure.MeasureRunner` options for
             ``oracle="measured"`` (``reps=``, ``warmup=``, ``max_dim=``,
-            ``interpret=``...).
+            ``interpret=``...) — applied per worker under the pool.
+
+    A facade that built a measured oracle owns its transport: call
+    :meth:`close` (or use the facade as a context manager) to release
+    pool workers and the DB file handle.  For many concurrent sessions
+    over one shared pool, use :class:`repro.service.TuningService`.
     """
 
     def __init__(self, cfg: NeuroVecConfig = DEFAULT,
@@ -87,25 +123,30 @@ class NeuroVectorizer:
                  oracle: Union[str, Oracle, None] = None, seed: int = 0,
                  db_path: Optional[str] = None,
                  oracle_kwargs: Optional[dict] = None,
+                 transport: Union[str, MeasureTransport, None] = None,
+                 workers: Optional[int] = None,
                  **agent_kwargs):
         self.cfg = cfg
-        if oracle is None or oracle == "model":
-            if db_path is not None or oracle_kwargs:
-                raise ValueError(
-                    "db_path/oracle_kwargs apply only to oracle='measured'")
-            self.oracle: Oracle = CostModelEnv(cfg, seed=seed)
-        elif oracle == "measured":
-            self.oracle = make_measured_env(cfg, db_path=db_path,
-                                            seed=seed,
-                                            **(oracle_kwargs or {}))
-        elif isinstance(oracle, str):
-            raise ValueError(f"unknown oracle {oracle!r}: "
-                             f"expected 'model' or 'measured'")
+        self._owns_oracle = False
+        if oracle == "measured":
+            self.oracle: Oracle = make_measured_env(
+                cfg, db_path=db_path, seed=seed, transport=transport,
+                workers=workers, **(oracle_kwargs or {}))
+            # a borrowed MeasureTransport instance is not ours to close
+            self._owns_oracle = transport is None or isinstance(transport,
+                                                                str)
         else:
-            if db_path is not None or oracle_kwargs:
-                raise ValueError(
-                    "db_path/oracle_kwargs apply only to oracle='measured'")
-            self.oracle = oracle
+            if db_path is not None or oracle_kwargs or \
+                    transport is not None or workers is not None:
+                raise ValueError("db_path/oracle_kwargs/transport/workers "
+                                 "apply only to oracle='measured'")
+            if oracle is None or oracle == "model":
+                self.oracle = CostModelEnv(cfg, seed=seed)
+            elif isinstance(oracle, str):
+                raise ValueError(f"unknown oracle {oracle!r}: "
+                                 f"expected 'model' or 'measured'")
+            else:
+                self.oracle = oracle
         self.agent: Agent = (make_agent(agent, cfg, seed=seed,
                                         **agent_kwargs)
                              if isinstance(agent, str) else agent)
@@ -147,3 +188,16 @@ class NeuroVectorizer:
         """Aggregate speedup of ``program`` over the heuristic baseline,
         priced by this facade's oracle semantics."""
         return program_speedup(program, list(sites), env=self.oracle)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Release the measured oracle's transport (pool workers, DB file
+        handle) when this facade built it.  No-op otherwise; idempotent."""
+        if self._owns_oracle:
+            self.oracle.measure_fn.transport.close()
+
+    def __enter__(self) -> "NeuroVectorizer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -114,8 +114,14 @@ class PollyAgent:
 
 
 def polly_action(space, site: KernelSite):
-    """Deprecated per-site shim — kept for old callers; prefer
-    ``make_agent("polly", cfg)``."""
+    """Deprecated per-site shim — prefer ``make_agent("polly", cfg)``
+    (vectorized, protocol-conformant).  Emits ``DeprecationWarning``;
+    scheduled for removal in PR 6 (see ROADMAP.md deprecations)."""
+    import warnings
+    warnings.warn("polly_action(space, site) is deprecated; use "
+                  "make_agent('polly', cfg).act(sites) instead "
+                  "(removal scheduled for PR 6)",
+                  DeprecationWarning, stacklevel=2)
     return PollyAgent(space).act([site])[0]
 
 

@@ -21,9 +21,29 @@ that pluggability formal:
   :class:`~repro.api.NeuroVectorizer` facade never care which one they are
   talking to.
 
-Both are :func:`typing.runtime_checkable`, so ``isinstance(x, Oracle)``
-verifies structural conformance (presence of the members, not signatures —
-the shared contract test in ``tests/test_api.py`` checks behaviour).
+* :class:`MeasureTransport` — how measurements *execute*.  The Oracle
+  protocol is synchronous by design (agents consume arrays); underneath
+  it, turning ``(site, tiles)`` pairs into seconds may happen in-process
+  (:class:`~repro.measure.transport.InProcessTransport`), across a local
+  subprocess pool (:class:`~repro.measure.pool.WorkerPoolTransport`), or —
+  the seam this protocol exists for — on remote accelerator hosts.
+  ``submit(sites, tiles)`` returns one future per pair, ``drain()`` blocks
+  until everything in flight resolved, ``close()`` releases workers; the
+  whole object is context-managed.  Implementations own deduplication
+  (serve DB hits instantly, coalesce duplicate in-flight keys) and
+  fail-closed semantics (a pair that cannot be measured resolves to
+  ``inf``, never an exception out of ``result()``).
+
+:class:`AsyncOracle` is the bridge between the last two: it wraps a
+synchronous :class:`Oracle` together with the transport feeding it, so
+callers that want arrays call the Oracle surface and callers that want
+overlap (:class:`~repro.service.TuningService`) submit futures and drain.
+
+``Agent``/``Oracle``/``MeasureTransport`` are
+:func:`typing.runtime_checkable`, so ``isinstance(x, Oracle)`` verifies
+structural conformance (presence of the members, not signatures — the
+shared contract tests in ``tests/test_api.py`` / ``tests/test_transport.py``
+check behaviour).
 """
 from __future__ import annotations
 
@@ -93,3 +113,125 @@ class Oracle(Protocol):
         need not lie on the action grid; ``inf`` = illegal) — what
         ``program_speedup`` prices saved ``TileProgram`` entries with."""
         ...
+
+
+@runtime_checkable
+class MeasureTransport(Protocol):
+    """An asynchronous executor of ``(site, tiles)`` measurements.
+
+    The contract every implementation (in-process, subprocess pool,
+    future remote hosts) must honour — exercised for all of them by the
+    shared conformance suite in ``tests/test_transport.py``:
+
+    * ``submit`` never blocks on measurement (in-process transports may
+      execute eagerly, but the *futures* interface is the contract);
+      the returned futures are index-aligned with the submitted pairs.
+    * duplicate keys — whether already in flight or repeated within one
+      batch — coalesce to a single measurement feeding every future.
+    * results stream into the transport's :class:`~repro.measure.db.
+      MeasureDB` (when one is attached) exactly once per key; pairs
+      already in the DB resolve instantly without re-measuring.
+    * a pair that cannot be measured (kernel build/compile/run failure,
+      worker death past the retry budget) resolves to ``inf`` —
+      fail-closed, never an exception out of ``future.result()``.
+    """
+
+    @property
+    def backend_key(self) -> str:
+        """Measurement-conditions fingerprint (DB cache key component)."""
+        ...
+
+    def submit(self, sites: Sequence, tiles) -> Sequence:
+        """Enqueue ``(site, tiles)`` pairs; one future per pair, in
+        submission order.  Each future's ``result()`` is seconds
+        (``inf`` = failed/fail-closed)."""
+        ...
+
+    def drain(self) -> None:
+        """Block until every in-flight measurement has resolved."""
+        ...
+
+    def close(self) -> None:
+        """Drain, then release workers/files.  Idempotent."""
+        ...
+
+    def stats(self) -> dict:
+        """Counters: ``hits`` / ``misses`` / ``coalesced`` /
+        ``timed_pairs`` / ``failed_pairs`` / ``retries`` /
+        ``in_flight``."""
+        ...
+
+    def __enter__(self) -> "MeasureTransport":
+        ...
+
+    def __exit__(self, *exc) -> None:
+        ...
+
+
+class AsyncOracle:
+    """A synchronous :class:`Oracle` and its :class:`MeasureTransport`
+    behind one handle — the adapter :class:`~repro.service.TuningService`
+    sessions talk to.
+
+    The full Oracle surface delegates to ``oracle`` (so ``isinstance(x,
+    Oracle)`` holds and agents train against it unchanged); the async
+    surface exposes the transport underneath: :meth:`submit_tiles` returns
+    raw futures for callers that overlap measurement with other work, and
+    :meth:`drain`/:meth:`close` manage the transport lifecycle.  Closing
+    is context-managed and never closes a transport the adapter did not
+    receive (``transport=None`` adapts a purely synchronous oracle, e.g.
+    the analytic :class:`~repro.core.env.CostModelEnv`)."""
+
+    def __init__(self, oracle: Oracle, transport=None):
+        self.oracle = oracle
+        self.transport = transport
+
+    # -- Oracle delegation ---------------------------------------------------
+    @property
+    def cfg(self):
+        return self.oracle.cfg
+
+    @property
+    def space(self):
+        return self.oracle.space
+
+    def baseline_costs(self, sites: Sequence) -> np.ndarray:
+        return self.oracle.baseline_costs(sites)
+
+    def costs_batch(self, sites: Sequence, actions) -> np.ndarray:
+        return self.oracle.costs_batch(sites, actions)
+
+    def rewards_batch(self, sites: Sequence, actions) -> np.ndarray:
+        return self.oracle.rewards_batch(sites, actions)
+
+    def speedups_batch(self, sites: Sequence, actions) -> np.ndarray:
+        return self.oracle.speedups_batch(sites, actions)
+
+    def cost_grid(self, sites: Sequence) -> np.ndarray:
+        return self.oracle.cost_grid(sites)
+
+    def tiles_costs(self, sites: Sequence, tiles) -> np.ndarray:
+        return self.oracle.tiles_costs(sites, tiles)
+
+    # -- async surface -------------------------------------------------------
+    def submit_tiles(self, sites: Sequence, tiles) -> Sequence:
+        """Futures of raw seconds per explicit ``(site, tiles)`` pair —
+        the overlap path (submit, do other work, ``drain()``, collect)."""
+        if self.transport is None:
+            raise RuntimeError("AsyncOracle has no transport "
+                               "(synchronous oracle) — use tiles_costs")
+        return self.transport.submit(sites, tiles)
+
+    def drain(self) -> None:
+        if self.transport is not None:
+            self.transport.drain()
+
+    def close(self) -> None:
+        if self.transport is not None:
+            self.transport.close()
+
+    def __enter__(self) -> "AsyncOracle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -14,6 +14,9 @@ the decode through the tuned Pallas kernels (interpret mode off-TPU).
 measurement of the kernels themselves (``repro.measure``; native on
 TPU/GPU, interpret-mode with capped shapes on CPU) and ``--measure-db
 PATH`` persists the timings so repeat invocations re-time nothing.
+``--transport pool --workers N`` fans the measurements out to N
+subprocess workers (the ``WorkerPoolTransport``) instead of timing in
+this process.
 """
 from __future__ import annotations
 
@@ -49,6 +52,9 @@ def _tile_plan(args, model, params, batch, cache):
         oracle_kw = {}
         if args.measured:
             oracle_kw = dict(oracle="measured", db_path=args.measure_db,
+                             transport=args.transport,
+                             workers=(args.workers
+                                      if args.transport == "pool" else None),
                              oracle_kwargs=dict(reps=args.measure_reps))
         nv = api.NeuroVectorizer(agent=args.autotune, **oracle_kw)
         fit_kw = ({"total_steps": args.autotune_steps}
@@ -63,9 +69,12 @@ def _tile_plan(args, model, params, batch, cache):
     print(f"[serve] tile plan: {len(prog.tiles)} tiles over {len(sites)} "
           f"sites, {how} speedup {sp:.2f}x")
     if args.measured and nv is not None:
-        mf = env.measure_fn
-        print(f"[serve] measurements: {mf.runner.timed_pairs} timed, "
-              f"{mf.hits} DB hits ({mf.runner.backend_key})")
+        t = env.measure_fn.transport
+        st = t.stats()
+        print(f"[serve] measurements: {st['timed_pairs']} timed, "
+              f"{st['hits']} DB hits, {st['coalesced']} coalesced "
+              f"({t.backend_key})")
+        nv.close()                      # release pool workers / DB handle
     return prog
 
 
@@ -92,6 +101,12 @@ def main(argv=None):
                          "against the same path re-time nothing)")
     ap.add_argument("--measure-reps", type=int, default=3,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--transport", choices=("inproc", "pool"),
+                    default="inproc",
+                    help="how measurements execute: this process, or a "
+                         "subprocess worker pool (repro.measure)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="pool size for --transport pool")
     ap.add_argument("--inject", action="store_true",
                     help="run decode through the tuned Pallas kernels")
     args = ap.parse_args(argv)
@@ -101,6 +116,15 @@ def main(argv=None):
         ap.error("--measured requires --autotune and no --tiles (it "
                  "changes the tuning oracle; --tiles loads a finished "
                  "plan)")
+    if args.measure_reps < 1:
+        ap.error(f"--measure-reps must be >= 1, got {args.measure_reps}")
+    if args.workers < 1:
+        ap.error(f"--workers must be >= 1, got {args.workers}")
+    if args.measured:
+        workers = args.workers if args.transport == "pool" else "-"
+        print(f"[serve] measured oracle: transport={args.transport} "
+              f"workers={workers} reps={args.measure_reps} "
+              f"db={args.measure_db or '-'}")
 
     cfg = get_config(args.arch)
     if not args.full:

@@ -2,53 +2,116 @@
 
 Closes the paper's loop: the reward signal becomes *measured execution
 time* of the compiled Pallas kernels (eq. 2) instead of the analytic
-stand-in.  Three layers:
+stand-in.  Layered bottom-up:
 
 * :mod:`repro.measure.timing` — the one median-of-reps timing loop every
   consumer shares (runner + benchmarks).
 * :mod:`repro.measure.runner` — :class:`MeasureRunner`, the batched
-  compile-and-time ``measure_fn`` (real kernels on TPU/GPU, interpret-mode
+  compile-and-time primitive (real kernels on TPU/GPU, interpret-mode
   Pallas on CPU so CI runs the full loop; per-tile failures fail closed).
 * :mod:`repro.measure.db` — :class:`MeasureDB`, the persistent JSONL
-  timing store + :class:`CachedMeasureFn` gluing runner and DB into the
-  oracle hook (repeat autotune runs re-time nothing).
+  timing store (repeat autotune runs re-time nothing).
+* :mod:`repro.measure.transport` / :mod:`repro.measure.pool` — *how*
+  measurements execute, behind the asynchronous
+  :class:`~repro.core.protocols.MeasureTransport` contract:
+  :class:`InProcessTransport` (the single-process path) and
+  :class:`WorkerPoolTransport` (fan out to N subprocess workers over a
+  length-prefixed JSON pipe protocol, coalescing duplicates, requeuing on
+  worker death).  :class:`TransportMeasureFn` adapts any transport into
+  the synchronous batched ``measure_fn`` hook the oracle consumes;
+  :class:`CachedMeasureFn` keeps the historical runner+DB spelling.
 
-:func:`make_measured_env` assembles the stack into a ready
+:func:`make_transport` builds a transport by name;
+:func:`make_measured_env` assembles a stack into a ready
 :class:`~repro.core.env.MeasuredEnv` — what
-``NeuroVectorizer(cfg, oracle="measured")`` constructs.
+``NeuroVectorizer(cfg, oracle="measured", transport=...)`` constructs.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
-from repro.measure.db import CachedMeasureFn, MeasureDB, make_key
+from repro.measure.db import MeasureDB, make_key
+from repro.measure.pool import WorkerPoolTransport
 from repro.measure.runner import (MeasureRunner, default_interpret,
                                   device_kind)
+from repro.measure.transport import (CachedMeasureFn, InProcessTransport,
+                                     TransportMeasureFn)
 from repro.measure import timing
 
+TRANSPORT_NAMES = ("inproc", "pool")
+
 __all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
-           "make_measured_env", "default_interpret", "device_kind",
-           "timing"]
+           "InProcessTransport", "WorkerPoolTransport", "TransportMeasureFn",
+           "TRANSPORT_NAMES", "make_transport", "make_measured_env",
+           "default_interpret", "device_kind", "timing"]
+
+
+def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,
+                   db: Optional[MeasureDB] = None,
+                   runner: Optional[MeasureRunner] = None,
+                   workers: Optional[int] = None, **runner_kwargs):
+    """Build a :class:`~repro.core.protocols.MeasureTransport` by name.
+
+    ``"inproc"`` — the calling process measures (``workers`` must be
+    unset); ``"pool"`` — ``workers`` subprocess workers (default 2), each
+    building its own :class:`MeasureRunner` from ``runner_kwargs``.
+    ``db_path``/``db`` attach the persistent timing store either way.
+    """
+    if db is not None and db_path is not None:
+        raise TypeError("pass either db= or db_path=, not both")
+    if db is None and db_path:
+        db = MeasureDB(db_path)
+    if name == "inproc":
+        if workers is not None:
+            raise ValueError("workers= applies only to transport='pool'")
+        if runner is None:
+            runner = MeasureRunner(**runner_kwargs)
+        elif runner_kwargs:
+            raise TypeError("pass either runner= or runner kwargs, not both")
+        return InProcessTransport(runner, db)
+    if name == "pool":
+        if runner is not None:
+            raise TypeError("transport='pool' builds one runner per worker "
+                            "from runner kwargs; runner= cannot be shared "
+                            "across processes")
+        return WorkerPoolTransport(
+            workers=workers if workers is not None else 2,
+            db=db, runner_kwargs=runner_kwargs)
+    raise ValueError(f"unknown transport {name!r}; "
+                     f"registered: {', '.join(TRANSPORT_NAMES)}")
 
 
 def make_measured_env(cfg=None, db_path: Optional[str] = None,
                       runner: Optional[MeasureRunner] = None,
-                      seed: int = 0, **runner_kwargs):
-    """A :class:`~repro.core.env.MeasuredEnv` wired to a real runner.
+                      seed: int = 0, transport: Union[str, object, None] = None,
+                      workers: Optional[int] = None, **runner_kwargs):
+    """A :class:`~repro.core.env.MeasuredEnv` wired to a real measurement
+    stack.
 
     ``db_path`` enables the persistent timing DB (a second run against the
-    same path performs zero timings); extra kwargs construct the default
-    :class:`MeasureRunner` (``reps=``, ``warmup=``, ``interpret=``,
-    ``max_dim=``...).  The assembled hook is reachable as
-    ``env.measure_fn`` (`.runner` / `.db` for stats and counters).
+    same path performs zero timings); ``transport`` selects how timings
+    execute — ``None``/``"inproc"`` (this process), ``"pool"`` with
+    ``workers=N`` (subprocess pool), or a pre-built
+    :class:`~repro.core.protocols.MeasureTransport`.  Extra kwargs
+    construct the :class:`MeasureRunner` (``reps=``, ``warmup=``,
+    ``interpret=``, ``max_dim=``...) — per worker under the pool.  The
+    assembled hook is reachable as ``env.measure_fn``
+    (``.transport`` / ``.db`` for stats and lifecycle; ``.runner`` on the
+    in-process path).
     """
     from repro.configs.neurovec import DEFAULT
     from repro.core.env import MeasuredEnv
 
-    if runner is None:
-        runner = MeasureRunner(**runner_kwargs)
-    elif runner_kwargs:
-        raise TypeError("pass either runner= or runner kwargs, not both")
-    db = MeasureDB(db_path) if db_path else None
+    if transport is None or isinstance(transport, str):
+        t = make_transport(transport or "inproc", db_path=db_path,
+                           runner=runner, workers=workers, **runner_kwargs)
+    else:
+        if db_path is not None or runner is not None or workers is not None \
+                or runner_kwargs:
+            raise TypeError("a pre-built transport carries its own "
+                            "runner/db/workers — drop the extra arguments")
+        t = transport
+    fn = (CachedMeasureFn(t) if isinstance(t, InProcessTransport)
+          else TransportMeasureFn(t))
     return MeasuredEnv(cfg if cfg is not None else DEFAULT,
-                       measure_fn=CachedMeasureFn(runner, db), seed=seed)
+                       measure_fn=fn, seed=seed)

@@ -16,16 +16,19 @@ skipped and counted, never fatal — the DB degrades to re-measuring.
 Failed measurements are stored as ``null`` (strict JSON) and round-trip
 back to ``inf``, so known-bad tiles are not re-timed either.
 
-:class:`CachedMeasureFn` composes a :class:`~repro.measure.runner.
-MeasureRunner` with a DB into the batched ``measure_fn`` hook the oracle
-consumes, tracking hit/miss statistics for the benchmark report.
+Execution moved behind the transport layer in PR 4:
+:class:`~repro.measure.transport.CachedMeasureFn` (still importable from
+here) composes a runner with a DB into the batched ``measure_fn`` hook via
+:class:`~repro.measure.transport.InProcessTransport`; the
+:class:`~repro.measure.pool.WorkerPoolTransport` streams subprocess-pool
+results into the same store.
 """
 from __future__ import annotations
 
 import json
 import os
 from collections import OrderedDict
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
@@ -108,46 +111,11 @@ class MeasureDB:
         return key in self._mem
 
 
-class CachedMeasureFn:
-    """DB-backed batched ``measure_fn``: time only what the DB lacks.
-
-    ``runner`` is any batched ``(sites, tiles) -> (n,) seconds`` callable
-    exposing ``backend_key`` (a :class:`MeasureRunner` in production, a
-    counting spy in tests); ``db=None`` disables persistence but keeps the
-    statistics, so callers can always report a hit rate.
-    """
-
-    def __init__(self, runner, db: Optional[MeasureDB] = None):
-        self.runner = runner
-        self.db = db
-        self.hits = 0                   # pairs served from the DB
-        self.misses = 0                 # pairs timed by the runner
-
-    @property
-    def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
-
-    def __call__(self, sites: Sequence, tiles) -> np.ndarray:
-        tiles = np.asarray(tiles, np.int64)
-        backend = getattr(self.runner, "backend_key", "unknown")
-        out = np.empty(len(sites), np.float64)
-        miss = []
-        for i, (s, t) in enumerate(zip(sites, tiles)):
-            v = self.db.get(make_key(s.key(), t, backend)) \
-                if self.db is not None else None
-            if v is None:
-                miss.append(i)
-            else:
-                out[i] = v
-                self.hits += 1
-        if miss:
-            vals = np.asarray(self.runner([sites[i] for i in miss],
-                                          tiles[miss]), np.float64)
-            for i, v in zip(miss, vals):
-                if self.db is not None:
-                    self.db.put(make_key(sites[i].key(), tiles[i], backend),
-                                float(v))
-                out[i] = v
-            self.misses += len(miss)
-        return out
+def __getattr__(name):
+    # CachedMeasureFn moved to repro.measure.transport (it is a shim over
+    # InProcessTransport now); keep the historical import path working
+    # without a module-level circular import
+    if name == "CachedMeasureFn":
+        from repro.measure.transport import CachedMeasureFn
+        return CachedMeasureFn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,383 @@
+"""``WorkerPoolTransport`` — fan (site, tiles) measurements out to N
+subprocess workers.
+
+The scaling seam the ROADMAP's remote-measurement open item asked for:
+measured-reward throughput is no longer capped at one local runner.  Each
+worker is its own process (own jax runtime — a kernel that wedges or
+kills the interpreter costs one worker, never the tuning loop) driven
+over a length-prefixed JSON pipe protocol (:mod:`repro.measure.worker`).
+
+Scheduling semantics (the :class:`~repro.core.protocols.MeasureTransport`
+contract, conformance-tested next to the in-process transport):
+
+* ``submit`` is non-blocking: DB hits resolve instantly, duplicate keys —
+  in one batch or across concurrent submitters — coalesce onto the single
+  in-flight job, fresh keys queue for the next idle worker.
+* results stream into the attached :class:`~repro.measure.db.MeasureDB`
+  as they arrive (exactly once per key), so a second run against the same
+  DB path performs zero timings no matter which transport produced it.
+* a job whose worker dies mid-measurement is requeued (the worker is
+  respawned); after ``max_attempts`` total tries it fails closed to
+  ``inf`` — the same marker as a kernel that fails to build.
+
+One dispatcher thread per worker keeps the design free of async
+machinery: the thread feeds its worker one job at a time (a job is a
+whole kernel compile+measure — there is nothing to pipeline under it)
+and doubles as the result reader, so worker death is detected exactly
+where the job context is known.
+"""
+from __future__ import annotations
+
+import os
+import select
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import asdict
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.measure.db import MeasureDB, make_key
+from repro.measure.transport import _TransportStats, _resolved
+from repro.measure.wire import read_frame, write_frame
+
+_MAX_SPAWN_FAILURES = 3                 # consecutive, per dispatcher thread
+
+
+def _read_frame_deadline(stream, deadline: Optional[float]):
+    """:func:`read_frame` bounded by a monotonic ``deadline`` —
+    ``TimeoutError`` on expiry.  Safe here because the protocol is one
+    frame per job (the pipe buffer is empty between frames, so select on
+    the fd sees everything)."""
+    while True:
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError("worker did not answer before the "
+                                   "deadline (wedged measurement?)")
+            r, _, _ = select.select([stream], [], [], remaining)
+            if not r:
+                continue
+        return read_frame(stream)
+
+
+class _Job:
+    __slots__ = ("key", "site", "tiles", "future", "attempts")
+
+    def __init__(self, key: str, site, tiles):
+        self.key = key
+        self.site = site
+        self.tiles = [int(x) for x in tiles]
+        self.future: Future = Future()
+        self.attempts = 0
+
+
+class WorkerPoolTransport:
+    """Subprocess measurement pool behind the MeasureTransport contract.
+
+    Parameters
+    ----------
+    workers:        pool size (one subprocess + dispatcher thread each).
+    db:             a :class:`MeasureDB`, a path for one, or ``None``.
+    runner_kwargs:  :class:`~repro.measure.runner.MeasureRunner` options
+                    each worker builds its runner from (``reps=``,
+                    ``interpret=``, ``max_dim=``, ...).
+    max_attempts:   total tries per job before failing closed to ``inf``
+                    (a try is consumed each time a worker dies holding
+                    the job).
+    factory:        ``"module:attr"`` runner factory override for the
+                    workers — the test seam (deterministic / crashing
+                    runners inside real processes).  Production leaves it
+                    ``None``.
+    spawn_timeout:  seconds to wait for each worker's ready handshake.
+    job_timeout:    seconds a worker may hold one job before it is
+                    treated as wedged (killed + job requeued, same as a
+                    death; ``None`` = unlimited).  Generous by default:
+                    a job is a whole kernel build+measure.
+    """
+
+    def __init__(self, workers: int = 2, db=None,
+                 runner_kwargs: Optional[dict] = None,
+                 max_attempts: int = 3, factory: Optional[str] = None,
+                 spawn_timeout: float = 180.0,
+                 job_timeout: Optional[float] = 900.0):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        self.workers = workers
+        self.db = MeasureDB(db) if isinstance(db, str) else db
+        self.runner_kwargs = dict(runner_kwargs or {})
+        self.max_attempts = max_attempts
+        self.factory = factory
+        self.spawn_timeout = spawn_timeout
+        self.job_timeout = job_timeout
+
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: "deque[_Job]" = deque()
+        self._inflight: dict = {}       # key -> _Job (queued or measuring)
+        self._stats = _TransportStats()
+        self._closing = False
+        self._backend: Optional[str] = None
+        self._ready = 0
+        self._live = workers            # dispatcher threads still running
+        self._spawn_error: Optional[BaseException] = None
+        self.worker_restarts = 0        # respawns after a worker death
+
+        self._threads = [
+            threading.Thread(target=self._dispatch, name=f"measure-w{i}",
+                             daemon=True)
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self._ready == workers or self._spawn_error,
+                timeout=spawn_timeout)
+            err = self._spawn_error
+            if err is not None or not ok:
+                self._closing = True    # wind the live threads down
+                self._cv.notify_all()
+        if err is not None:
+            raise RuntimeError("worker pool failed to start") from err
+        if not ok:
+            raise TimeoutError(
+                f"worker pool: {self._ready}/{workers} workers ready "
+                f"after {spawn_timeout}s")
+
+    # -- worker process lifecycle -------------------------------------------
+    def _spawn(self) -> subprocess.Popen:
+        env = dict(os.environ)
+        # the child must import repro (and, under tests, the helper
+        # factories) exactly as this process does
+        env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.measure.worker"],
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE, env=env)
+        try:
+            write_frame(proc.stdin, {"type": "init",
+                                     "runner": self.runner_kwargs,
+                                     "factory": self.factory})
+            ready = _read_frame_deadline(
+                proc.stdout, time.monotonic() + self.spawn_timeout)
+        except Exception:
+            self._kill(proc)
+            raise
+        if not ready or ready.get("type") != "ready":
+            proc.kill()
+            raise RuntimeError(f"worker handshake failed: {ready!r}")
+        with self._cv:
+            if self._backend is None:
+                self._backend = ready["backend"]
+            elif self._backend != ready["backend"]:
+                proc.kill()
+                raise RuntimeError(
+                    f"worker backend {ready['backend']!r} != pool "
+                    f"backend {self._backend!r} — mixed measurement "
+                    f"conditions would poison the DB")
+        return proc
+
+    def _kill(self, proc: Optional[subprocess.Popen]) -> None:
+        if proc is None:
+            return
+        try:
+            proc.kill()
+            proc.wait(timeout=5)
+        except Exception:
+            pass
+
+    def _stop_worker(self, proc: Optional[subprocess.Popen]) -> None:
+        """Polite shutdown: exit frame, short grace, then kill."""
+        if proc is None:
+            return
+        try:
+            write_frame(proc.stdin, {"type": "exit"})
+            proc.stdin.close()
+            proc.wait(timeout=10)
+        except Exception:
+            self._kill(proc)
+
+    # -- the per-worker dispatcher thread ------------------------------------
+    def _dispatch(self) -> None:
+        proc: Optional[subprocess.Popen] = None
+        counted_ready = False
+        spawn_failures = 0
+        job: Optional[_Job] = None
+        job_id = 0
+        try:
+            while True:
+                # keep a live worker BEFORE waiting for work: the
+                # constructor blocks on every worker's ready handshake
+                if proc is None or proc.poll() is not None:
+                    try:
+                        proc = self._spawn()
+                        spawn_failures = 0
+                    except Exception as e:
+                        spawn_failures += 1
+                        with self._cv:
+                            if not counted_ready:
+                                # this worker never came up: abort the
+                                # constructor rather than limp along
+                                self._spawn_error = e
+                                self._requeue_or_fail(job, hard=True)
+                                job = None
+                                self._cv.notify_all()
+                                return
+                            self._requeue_or_fail(job)
+                            job = None
+                            self._cv.notify_all()
+                            if spawn_failures >= _MAX_SPAWN_FAILURES:
+                                return
+                        time.sleep(0.1 * spawn_failures)
+                        continue
+                    if not counted_ready:
+                        counted_ready = True
+                        with self._cv:
+                            self._ready += 1
+                            self._cv.notify_all()
+                if job is None:
+                    with self._cv:
+                        self._cv.wait_for(
+                            lambda: self._pending or self._closing)
+                        if self._closing and not self._pending:
+                            return
+                        job = self._pending.popleft()
+                    continue        # re-check the worker before sending
+                job_id += 1
+                try:
+                    write_frame(proc.stdin, {"type": "job", "id": job_id,
+                                             "site": asdict(job.site),
+                                             "tiles": job.tiles})
+                    deadline = None if self.job_timeout is None else \
+                        time.monotonic() + self.job_timeout
+                    while True:
+                        msg = _read_frame_deadline(proc.stdout, deadline)
+                        if msg is None:
+                            raise EOFError("worker closed its pipe")
+                        if msg.get("type") == "result" \
+                                and msg.get("id") == job_id:
+                            break
+                except (OSError, EOFError, ValueError):
+                    # the worker died — or wedged past job_timeout
+                    # (TimeoutError is an OSError) — holding this job:
+                    # requeue (or fail closed) and respawn on the next
+                    # loop iteration
+                    self._kill(proc)
+                    proc = None
+                    with self._cv:
+                        self.worker_restarts += 1
+                        self._requeue_or_fail(job)
+                        job = None
+                        self._cv.notify_all()
+                    continue
+                v = float("inf") if msg["v"] is None else float(msg["v"])
+                self._resolve(job, v)
+                job = None
+        finally:
+            self._stop_worker(proc)
+            with self._cv:
+                self._live -= 1
+                if self._live == 0:
+                    # last dispatcher gone: nothing can make progress —
+                    # fail every queued job closed so drain() never hangs
+                    while self._pending:
+                        self._requeue_or_fail(self._pending.popleft(),
+                                              hard=True)
+                self._cv.notify_all()
+
+    # call with self._lock held
+    def _requeue_or_fail(self, job: Optional[_Job], hard: bool = False) -> None:
+        if job is None:
+            return
+        job.attempts += 1
+        if hard or job.attempts >= self.max_attempts:
+            # fail closed: same marker as a kernel that cannot build.
+            # Only the attempts-exhausted verdict is *persisted* — the
+            # job itself killed max_attempts workers, so the DB should
+            # remember it.  hard failures are pool infrastructure
+            # problems (spawn failures, shutdown): the pair was never
+            # tried, and a persisted inf would poison every future run.
+            if not hard and self.db is not None:
+                self.db.put(job.key, float("inf"))
+            self._stats.failed_pairs += 1
+            self._inflight.pop(job.key, None)
+            job.future.set_result(float("inf"))
+        else:
+            self._stats.retries += 1
+            self._pending.append(job)
+
+    def _resolve(self, job: _Job, v: float) -> None:
+        with self._cv:
+            if self.db is not None:
+                self.db.put(job.key, v)
+            if np.isfinite(v):
+                self._stats.timed_pairs += 1
+            else:
+                self._stats.failed_pairs += 1
+            self._inflight.pop(job.key, None)
+            job.future.set_result(v)
+            self._cv.notify_all()
+
+    # -- MeasureTransport surface --------------------------------------------
+    @property
+    def backend_key(self) -> str:
+        return self._backend or "unknown"
+
+    def submit(self, sites: Sequence, tiles) -> list:
+        tiles = np.asarray(tiles, np.int64)
+        futs: list = [None] * len(sites)
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("submit on a closed transport")
+            backend = self.backend_key
+            for i, (s, t) in enumerate(zip(sites, tiles)):
+                key = make_key(s.key(), t, backend)
+                v = self.db.get(key) if self.db is not None else None
+                if v is not None:
+                    self._stats.hits += 1
+                    futs[i] = _resolved(v)
+                elif key in self._inflight:
+                    self._stats.coalesced += 1
+                    futs[i] = self._inflight[key].future
+                else:
+                    job = _Job(key, s, t)
+                    self._stats.misses += 1
+                    self._inflight[key] = job
+                    self._pending.append(job)
+                    futs[i] = job.future
+            self._cv.notify_all()
+        return futs
+
+    def drain(self) -> None:
+        with self._cv:
+            self._cv.wait_for(lambda: not self._inflight)
+
+    def close(self) -> None:
+        if self._closing:
+            return
+        self.drain()
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=30)
+        if self.db is not None:
+            self.db.close()
+
+    def stats(self) -> dict:
+        with self._cv:
+            s = self._stats.snapshot(in_flight=len(self._inflight))
+        s["workers"] = self.workers
+        s["worker_restarts"] = self.worker_restarts
+        return s
+
+    def __enter__(self) -> "WorkerPoolTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

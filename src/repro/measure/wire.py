@@ -1,0 +1,34 @@
+"""Length-prefixed JSON framing — the wire format of the worker-pool
+pipe protocol (and the seam a future socket transport reuses).
+
+Every frame is ``len(payload)`` as a 4-byte big-endian prefix followed by
+the UTF-8 JSON payload.  Shared by :mod:`repro.measure.pool` (parent
+side) and :mod:`repro.measure.worker` (child side) — kept free of heavy
+imports so the worker entrypoint stays cheap to load.
+"""
+from __future__ import annotations
+
+import json
+import struct
+
+_LEN = struct.Struct(">I")
+
+
+def read_frame(stream) -> "dict | None":
+    """One length-prefixed JSON frame; ``None`` on clean EOF."""
+    head = stream.read(_LEN.size)
+    if not head:
+        return None
+    if len(head) < _LEN.size:
+        raise EOFError("truncated frame header")
+    (n,) = _LEN.unpack(head)
+    payload = stream.read(n)
+    if len(payload) < n:
+        raise EOFError("truncated frame payload")
+    return json.loads(payload.decode("utf-8"))
+
+
+def write_frame(stream, msg: dict) -> None:
+    payload = json.dumps(msg).encode("utf-8")
+    stream.write(_LEN.pack(len(payload)) + payload)
+    stream.flush()

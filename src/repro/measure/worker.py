@@ -1,0 +1,90 @@
+"""Measurement worker — the subprocess end of the worker-pool transport.
+
+One worker = one process = one :class:`~repro.measure.runner.MeasureRunner`
+(its own jax runtime, so a kernel that wedges or crashes the interpreter
+takes down a *worker*, never the tuning process).  The parent
+(:class:`~repro.measure.pool.WorkerPoolTransport`) speaks a length-prefixed
+JSON frame protocol over the worker's stdin/stdout pipes:
+
+==========  ============================================================
+direction   frame
+==========  ============================================================
+parent →    ``{"type": "init", "runner": {...}, "factory": mod:attr|null}``
+worker →    ``{"type": "ready", "backend": <runner.backend_key>}``
+parent →    ``{"type": "job", "id": n, "site": {...}, "tiles": [a, b, c]}``
+worker →    ``{"type": "result", "id": n, "v": seconds | null}``
+parent →    ``{"type": "exit"}`` (or EOF)  — worker exits 0
+==========  ============================================================
+
+Every frame is ``len(payload)`` as a 4-byte big-endian prefix followed by
+the UTF-8 JSON payload.  ``"v": null`` is a failed measurement (the
+parent resolves it to ``inf`` — the shared fail-closed marker); a worker
+that *dies* instead of answering is the parent's problem (requeue).
+
+``factory`` names a ``module:attribute`` callable returning a runner
+(``(sites, tiles) -> (n,) seconds`` with ``backend_key``) — the test
+seam that lets the conformance suite run deterministic or deliberately
+crashing runners inside real worker processes.  Production workers leave
+it null and build a :class:`MeasureRunner` from the ``runner`` kwargs.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import sys
+
+from repro.measure.wire import read_frame, write_frame
+
+
+def _build_runner(init: dict):
+    factory = init.get("factory")
+    if factory:
+        mod, _, attr = factory.partition(":")
+        return getattr(importlib.import_module(mod), attr)()
+    from repro.measure.runner import MeasureRunner
+    return MeasureRunner(**(init.get("runner") or {}))
+
+
+def _site(d: dict):
+    from repro.models.compute import KernelSite
+    return KernelSite(**d)
+
+
+def main() -> int:
+    # the protocol owns fd 1: re-route any stray print (jax warnings,
+    # user runner chatter) to stderr so it can never corrupt a frame
+    proto_out = os.fdopen(os.dup(1), "wb")
+    os.dup2(2, 1)
+    sys.stdout = sys.stderr
+    inp = sys.stdin.buffer
+
+    init = read_frame(inp)
+    if init is None or init.get("type") != "init":
+        return 2
+    runner = _build_runner(init)
+    write_frame(proto_out, {"type": "ready",
+                            "backend": getattr(runner, "backend_key",
+                                               "unknown")})
+
+    while True:
+        msg = read_frame(inp)
+        if msg is None or msg.get("type") == "exit":
+            return 0
+        if msg.get("type") != "job":
+            continue
+        import numpy as np
+        try:
+            v = float(np.asarray(runner([_site(msg["site"])],
+                                        np.asarray([msg["tiles"]],
+                                                   np.int64))).reshape(-1)[0])
+        except Exception:
+            # a runner that raises instead of returning inf must not kill
+            # the worker (a death costs the parent a respawn + a retry
+            # attempt); answer the documented failure marker instead
+            v = float("inf")
+        write_frame(proto_out, {"type": "result", "id": msg["id"],
+                                "v": None if not np.isfinite(v) else v})
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""``repro.service`` — service-oriented autotuning.
+
+:class:`TuningService` owns one shared
+:class:`~repro.core.protocols.MeasureTransport` (in-process or a
+subprocess worker pool) and hands out :class:`SessionHandle` sessions —
+each an agent + oracle pair with async tuning (``tune_async`` →
+``Future[TileProgram]``) and per-session statistics.  See
+:mod:`repro.service.service` for the full picture.
+"""
+from __future__ import annotations
+
+from repro.service.service import SessionHandle, TuningService, open_session
+
+__all__ = ["TuningService", "SessionHandle", "open_session"]

@@ -1,0 +1,273 @@
+"""``TuningService`` — session-oriented autotuning over one shared
+measurement transport.
+
+The facade (:class:`~repro.api.NeuroVectorizer`) is one pipeline, one
+oracle, one caller.  The service is the next altitude: a long-lived
+object owning one :class:`~repro.core.protocols.MeasureTransport`
+(typically a :class:`~repro.measure.pool.WorkerPoolTransport`) that many
+concurrent *sessions* share — each session pairing its own agent with its
+own oracle view, all feeding the same worker pool and the same persistent
+:class:`~repro.measure.db.MeasureDB`.  Duplicate (site, tiles) keys
+across sessions coalesce inside the transport, so two sessions tuning
+overlapping corpora never measure the same pair twice.
+
+::
+
+    with TuningService(cfg, transport="pool", workers=4,
+                       db_path="measure.jsonl", reps=3) as svc:
+        s1 = svc.open_session(agent="ppo", oracle="measured")
+        s2 = svc.open_session(agent="brute", oracle="measured")
+        s1.fit(corpus, total_steps=5000)
+        f1 = s1.tune_async(sites_a)          # overlapping tunes...
+        f2 = s2.fit(sites_b).tune_async(sites_b)
+        prog_a, prog_b = f1.result(), f2.result()
+        print(s1.stats())                    # timings, hit rate, in-flight
+
+Sessions run their async work on the service's thread pool; the actual
+measurement parallelism lives below, in the transport's workers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Optional, Sequence, Union
+
+from repro.configs.neurovec import DEFAULT, NeuroVecConfig
+from repro.core.agents import make_agent
+from repro.core.env import CostModelEnv, MeasuredEnv
+from repro.core.protocols import Agent, AsyncOracle, Oracle
+from repro.core.vectorizer import TileProgram, tune
+from repro.measure import TransportMeasureFn, make_transport
+
+_COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
+             "retries")
+
+
+class SessionHandle:
+    """One tuning session: an agent + an oracle view over the service's
+    shared transport.
+
+    ``fit``/``tune`` are the synchronous verbs of the facade;
+    :meth:`tune_async` submits the tune to the service's thread pool and
+    returns a :class:`~concurrent.futures.Future` of the
+    :class:`TileProgram`, so callers overlap tuning across sessions (the
+    measurements themselves already overlap inside the transport).
+    :meth:`stats` reports per-session wall/throughput counters plus the
+    transport's counter *deltas since the session opened*."""
+
+    def __init__(self, service: "TuningService", name: str, agent: Agent,
+                 oracle: AsyncOracle):
+        self.service = service
+        self.name = name
+        self.agent = agent
+        self.oracle = oracle
+        self._lock = threading.Lock()
+        self._opened = time.perf_counter()
+        self._fit_wall = 0.0
+        self._tune_wall = 0.0
+        self._tunes = 0
+        self._sites_tuned = 0
+        self._outstanding: "set[Future]" = set()
+        self._closed = False
+        t = oracle.transport
+        self._base = dict.fromkeys(_COUNTERS, 0) if t is None else t.stats()
+
+    # -- the facade verbs ----------------------------------------------------
+    def fit(self, sites: Sequence, **fit_kwargs) -> "SessionHandle":
+        """Train/label the session's agent against its oracle."""
+        self._check_open()
+        t0 = time.perf_counter()
+        self.agent.fit(sites, self.oracle, **fit_kwargs)
+        with self._lock:
+            self._fit_wall += time.perf_counter() - t0
+        return self
+
+    def tune(self, sites: Sequence) -> TileProgram:
+        """Greedy inference-mode tiles for ``sites`` (synchronous)."""
+        self._check_open()
+        return self._tune(list(sites))
+
+    def tune_async(self, sites: Sequence) -> "Future[TileProgram]":
+        """Submit :meth:`tune` to the service's session pool; the result
+        future resolves to the :class:`TileProgram`."""
+        self._check_open()
+        fut = self.service._submit(self._tune, list(sites))
+        with self._lock:
+            self._outstanding.add(fut)
+        fut.add_done_callback(self._forget)
+        return fut
+
+    def _tune(self, sites: list) -> TileProgram:
+        t0 = time.perf_counter()
+        prog = tune(sites, self.agent, self.oracle.space)
+        with self._lock:
+            self._tune_wall += time.perf_counter() - t0
+            self._tunes += 1
+            self._sites_tuned += len(sites)
+        return prog
+
+    def _forget(self, fut: Future) -> None:
+        with self._lock:
+            self._outstanding.discard(fut)
+
+    # -- observability / lifecycle -------------------------------------------
+    def stats(self) -> dict:
+        """Per-session counters + transport deltas since ``open_session``."""
+        t = self.oracle.transport
+        now = self._base if t is None else t.stats()
+        delta = {k: now.get(k, 0) - self._base.get(k, 0) for k in _COUNTERS}
+        n = delta["hits"] + delta["misses"] + delta["coalesced"]
+        delta["hit_rate"] = (delta["hits"] / n) if n else 0.0
+        delta["in_flight"] = now.get("in_flight", 0)
+        with self._lock:
+            return {"session": self.name, "agent": self.agent.name,
+                    "wall_s": time.perf_counter() - self._opened,
+                    "fit_wall_s": self._fit_wall,
+                    "tune_wall_s": self._tune_wall,
+                    "tunes": self._tunes, "sites_tuned": self._sites_tuned,
+                    "in_flight_tunes": len(self._outstanding),
+                    "transport": delta}
+
+    def drain(self) -> None:
+        """Block until this session's async tunes (and everything the
+        shared transport has in flight) are finished."""
+        for f in list(self._outstanding):
+            f.result()
+        self.oracle.drain()
+
+    def close(self) -> None:
+        """Finish outstanding work and detach.  The shared transport
+        stays up — it belongs to the service."""
+        if not self._closed:
+            self.drain()
+            self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(f"session {self.name!r} is closed")
+        if self.service._closed:
+            raise RuntimeError("the TuningService is closed")
+
+    def __enter__(self) -> "SessionHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TuningService:
+    """The service root: one shared transport, many sessions.
+
+    Parameters
+    ----------
+    cfg:        default :class:`NeuroVecConfig` for sessions that do not
+                bring their own.
+    transport:  ``"inproc"`` (default) / ``"pool"`` / a pre-built
+                :class:`~repro.core.protocols.MeasureTransport` (the
+                service then *borrows* it and will not close it).
+    workers:    pool size when ``transport="pool"``.
+    db_path:    persistent :class:`MeasureDB` path shared by every
+                session (repeat runs re-time nothing).
+    max_parallel_tunes: thread-pool width for :meth:`SessionHandle.
+                tune_async` (measurement parallelism is the transport's).
+    runner_kwargs: :class:`~repro.measure.runner.MeasureRunner` options
+                (``reps=``, ``interpret=``, ``max_dim=``, ...) — per
+                worker under the pool transport.
+    """
+
+    def __init__(self, cfg: NeuroVecConfig = DEFAULT,
+                 transport: Union[str, object] = "inproc",
+                 workers: Optional[int] = None,
+                 db_path: Optional[str] = None, seed: int = 0,
+                 max_parallel_tunes: int = 4, **runner_kwargs):
+        self.cfg = cfg
+        self.seed = seed
+        if isinstance(transport, str):
+            self.transport = make_transport(transport, db_path=db_path,
+                                            workers=workers, **runner_kwargs)
+            self._owns_transport = True
+        else:
+            if db_path is not None or workers is not None or runner_kwargs:
+                raise TypeError("a pre-built transport carries its own "
+                                "runner/db/workers — drop the extra "
+                                "arguments")
+            self.transport = transport
+            self._owns_transport = False
+        self._executor = ThreadPoolExecutor(max_workers=max_parallel_tunes,
+                                            thread_name_prefix="tune")
+        self._sessions: "list[SessionHandle]" = []
+        self._n_opened = 0
+        self._closed = False
+
+    # -- sessions ------------------------------------------------------------
+    def open_session(self, cfg: Optional[NeuroVecConfig] = None,
+                     agent: Union[str, Agent] = "ppo",
+                     oracle: Union[str, Oracle] = "measured",
+                     seed: Optional[int] = None,
+                     **agent_kwargs) -> SessionHandle:
+        """A new session: ``agent`` (registry name or :class:`Agent`)
+        paired with ``oracle`` — ``"measured"`` (reward = the shared
+        transport's timings), ``"model"`` (the analytic
+        :class:`CostModelEnv`), or a pre-built :class:`Oracle`."""
+        if self._closed:
+            raise RuntimeError("open_session on a closed TuningService")
+        cfg = self.cfg if cfg is None else cfg
+        seed = self.seed if seed is None else seed
+        if oracle == "measured":
+            env: Oracle = MeasuredEnv(
+                cfg, measure_fn=TransportMeasureFn(self.transport),
+                seed=seed)
+            async_oracle = AsyncOracle(env, self.transport)
+        elif oracle == "model":
+            async_oracle = AsyncOracle(CostModelEnv(cfg, seed=seed))
+        elif isinstance(oracle, str):
+            raise ValueError(f"unknown oracle {oracle!r}: "
+                             f"expected 'model' or 'measured'")
+        else:
+            async_oracle = AsyncOracle(oracle)
+        a = (make_agent(agent, cfg, seed=seed, **agent_kwargs)
+             if isinstance(agent, str) else agent)
+        self._n_opened += 1
+        handle = SessionHandle(self, f"session-{self._n_opened}", a,
+                               async_oracle)
+        self._sessions.append(handle)
+        return handle
+
+    def _submit(self, fn, *args) -> Future:
+        return self._executor.submit(fn, *args)
+
+    # -- observability / lifecycle -------------------------------------------
+    def stats(self) -> dict:
+        return {"sessions_open": sum(not s._closed for s in self._sessions),
+                "sessions_total": self._n_opened,
+                "owns_transport": self._owns_transport,
+                "transport": self.transport.stats()}
+
+    def close(self) -> None:
+        """Close every session, stop the tune pool, and — when the
+        service built it — close the transport.  Idempotent."""
+        if self._closed:
+            return
+        for s in self._sessions:
+            s.close()
+        self._closed = True
+        self._executor.shutdown(wait=True)
+        if self._owns_transport:
+            self.transport.close()
+
+    def __enter__(self) -> "TuningService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open_session(cfg: NeuroVecConfig = DEFAULT, agent="ppo",
+                 oracle="measured", **service_kwargs) -> SessionHandle:
+    """One-shot convenience: a private :class:`TuningService` wrapped
+    around a single session.  Closing the returned session's *service*
+    (``handle.service.close()`` or using it as a context manager) tears
+    the private transport down."""
+    svc = TuningService(cfg, **service_kwargs)
+    return svc.open_session(agent=agent, oracle=oracle)

@@ -1,0 +1,125 @@
+"""Worker-side runner factories for the transport tests.
+
+The pool transport's ``factory="module:attr"`` seam imports these *inside
+real worker subprocesses* (the pool propagates ``sys.path``, which
+includes this directory under pytest), so the conformance suite can run
+deterministic — or deliberately crashing — runners through the genuine
+pipe protocol without paying a jax import per worker.
+
+Determinism across processes matters: values derive from ``zlib.crc32``
+of the DB key material (``hash()`` is salted per process and would break
+the in-process-vs-pool parity assertions).
+"""
+from __future__ import annotations
+
+import os
+import time
+import zlib
+
+import numpy as np
+
+
+def fake_value(site_key: str, tiles) -> float:
+    """Deterministic pseudo-seconds for one (site, tiles) pair."""
+    text = f"{site_key}|{tuple(int(x) for x in tiles)}"
+    return 1e-4 * (1 + zlib.crc32(text.encode()) % 1000)
+
+
+class FakeRunner:
+    """Deterministic batched runner with a stable backend fingerprint."""
+
+    backend_key = "fake-backend"
+
+    def __init__(self, delay: float = 0.0):
+        self.delay = delay
+        self.calls = 0
+        self.pairs = 0
+
+    def __call__(self, sites, tiles):
+        self.calls += 1
+        self.pairs += len(sites)
+        if self.delay:
+            time.sleep(self.delay)
+        return np.array([fake_value(s.key(), t)
+                         for s, t in zip(sites, tiles)], np.float64)
+
+
+class _BoomRunner(FakeRunner):
+    """Kills the whole worker process on the marked site.
+
+    ``transient=True`` leaves a sentinel file (``REPRO_TEST_BOOM_FILE``)
+    behind first, so the *respawned* worker measures the pair normally —
+    the requeue-recovers path.  ``transient=False`` dies every time — the
+    fail-closed-after-K-attempts path.
+    """
+
+    def __init__(self, transient: bool):
+        super().__init__()
+        self.transient = transient
+
+    def __call__(self, sites, tiles):
+        sentinel = os.environ.get("REPRO_TEST_BOOM_FILE", "")
+        for s in sites:
+            if s.site == "boom" and not (self.transient and sentinel
+                                         and os.path.exists(sentinel)):
+                if self.transient and sentinel:
+                    with open(sentinel, "w") as f:
+                        f.write("died once\n")
+                os._exit(3)         # simulated hard worker death
+        return super().__call__(sites, tiles)
+
+
+class FailRunner(FakeRunner):
+    """Fails (``inf``) on any site named ``"fail"``, measures the rest."""
+
+    def __call__(self, sites, tiles):
+        out = super().__call__(sites, tiles)
+        return np.where([s.site == "fail" for s in sites], np.inf, out)
+
+
+class RaisingRunner(FakeRunner):
+    """Raises (instead of returning inf) on any site named ``"boom"`` —
+    the misbehaving-custom-runner case the worker must survive."""
+
+    def __call__(self, sites, tiles):
+        if any(s.site == "boom" for s in sites):
+            raise RuntimeError("simulated runner bug")
+        return super().__call__(sites, tiles)
+
+
+class WedgingRunner(FakeRunner):
+    """Hangs forever on any site named ``"wedge"`` — the stuck-kernel
+    case ``job_timeout`` exists for."""
+
+    def __call__(self, sites, tiles):
+        if any(s.site == "wedge" for s in sites):
+            time.sleep(3600)
+        return super().__call__(sites, tiles)
+
+
+def deterministic():
+    return FakeRunner()
+
+
+def failing():
+    return FailRunner()
+
+
+def raising():
+    return RaisingRunner()
+
+
+def wedging():
+    return WedgingRunner()
+
+
+def slow():
+    return FakeRunner(delay=0.3)
+
+
+def boom_once():
+    return _BoomRunner(transient=True)
+
+
+def boom_always():
+    return _BoomRunner(transient=False)

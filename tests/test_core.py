@@ -14,8 +14,8 @@ except ImportError:                    # ... deterministic sweep on bare envs
 from repro.configs.neurovec import NeuroVecConfig
 from repro.core import costmodel, dataset
 from repro.core.agents import (DecisionTreeAgent, NNSAgent, PPOAgent,
-                               RandomAgent, brute_force_action,
-                               brute_force_labels, polly_action)
+                               PollyAgent, RandomAgent, brute_force_action,
+                               brute_force_labels)
 from repro.core.env import ActionSpace, CostModelEnv
 from repro.core import embedding as emb
 from repro.core.vectorizer import (TileProgram, baseline_program, inject,
@@ -177,8 +177,16 @@ def test_polly_beats_baseline_on_bandwidth_bound():
     # Polly optimizes locality only: on a bandwidth-bound site it should
     # at least match the heuristic baseline
     s = _mm(65536, 512, 512)
-    a = polly_action(SPACE, s)
+    a = PollyAgent(SPACE).act([s])[0]
     assert ENV.speedup(s, a) >= 0.95
+
+
+def test_polly_action_shim_warns():
+    from repro.core.agents import polly_action
+    s = _mm(65536, 512, 512)
+    with pytest.warns(DeprecationWarning, match="polly_action"):
+        a = polly_action(SPACE, s)
+    np.testing.assert_array_equal(a, PollyAgent(SPACE).act([s])[0])
 
 
 # ---------------------------------------------------------------------------
