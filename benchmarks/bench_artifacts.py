@@ -1,0 +1,118 @@
+"""Benchmark of the persistence layer (``repro.artifacts``, PR 5).
+
+Writes ``BENCH_artifacts.json`` with the numbers the warm-start story is
+sold on:
+
+* ``cold`` — full cost of producing a tuning artifact from nothing:
+  construct + ``fit`` (PPO vs the analytic oracle) + first ``tune``.
+* ``restore`` — ``nv.save`` wall, ``NeuroVectorizer.load`` wall (the
+  deploy-time cost that replaces the fit), and the artifact size.
+* ``store`` — warm ``tune_sites`` latency through a hot
+  :class:`~repro.artifacts.ProgramStore` vs. a cold inference pass, and
+  the hit rate over a mixed seen/unseen workload.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_artifacts``
+(``BENCH_FAST=1`` trims the RL budget; ``BENCH_ARTIFACTS_OUT`` overrides
+the output path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from repro.api import NeuroVectorizer
+from repro.artifacts import ProgramStore
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import dataset
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_ARTIFACTS_OUT", "BENCH_artifacts.json")
+
+CFG = NeuroVecConfig(train_batch=64, sgd_minibatch=32, ppo_epochs=2,
+                     lr=5e-4)
+FIT_STEPS = 256 if FAST else 2048
+N_SITES = 24 if FAST else 64
+WARM_REPS = 20 if FAST else 100
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def run() -> dict:
+    work = tempfile.mkdtemp(prefix="bench_artifacts_")
+    art = os.path.join(work, "facade")
+    store_path = os.path.join(work, "programs.jsonl")
+    sites = dataset.generate(N_SITES, seed=5)
+    unseen = dataset.generate(N_SITES // 2, seed=6)
+
+    # -- cold: construct + fit + first tune ---------------------------------
+    t0 = time.perf_counter()
+    nv = NeuroVectorizer(CFG, agent="ppo", seed=0, program_store=store_path)
+    nv.fit(sites, total_steps=FIT_STEPS)
+    fit_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    prog_cold = nv.tune_sites(sites)
+    cold_tune_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    nv.save(art)
+    save_wall = time.perf_counter() - t0
+    nv.close()
+
+    # -- restore: load replaces the whole fit -------------------------------
+    t0 = time.perf_counter()
+    nv2 = NeuroVectorizer.load(art, program_store=store_path)
+    load_wall = time.perf_counter() - t0
+
+    # -- warm tune: a store hit vs. a fresh inference pass ------------------
+    t0 = time.perf_counter()
+    for _ in range(WARM_REPS):
+        prog_warm = nv2.tune_sites(sites)
+    warm_tune_wall = (time.perf_counter() - t0) / WARM_REPS
+    assert prog_warm.tiles == prog_cold.tiles, "round-trip broke"
+    assert nv2.agent_inferences == 0, "warm tunes must be pure lookups"
+
+    # mixed workload: half the site sets were never tuned before
+    nv2.tune_sites(unseen)
+    hit_rate = nv2.store_hits / (nv2.store_hits + nv2.store_misses)
+
+    nv2.close()
+    results = {
+        "config": {"fast": FAST, "fit_steps": FIT_STEPS,
+                   "n_sites": N_SITES, "warm_reps": WARM_REPS},
+        "cold": {"fit_wall_s": fit_wall,
+                 "first_tune_wall_s": cold_tune_wall,
+                 "total_wall_s": fit_wall + cold_tune_wall},
+        "restore": {"save_wall_s": save_wall, "load_wall_s": load_wall,
+                    "artifact_bytes": _dir_bytes(art),
+                    "fit_to_load_speedup": fit_wall / max(load_wall, 1e-9)},
+        "store": {"warm_tune_wall_s": warm_tune_wall,
+                  "cold_tune_wall_s": cold_tune_wall,
+                  "lookup_speedup": cold_tune_wall / max(warm_tune_wall,
+                                                         1e-9),
+                  "hit_rate": hit_rate,
+                  "store_bytes": os.path.getsize(store_path)},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"bench_artifacts,fit_wall_s,{fit_wall:.3f}")
+    print(f"bench_artifacts,load_wall_s,{load_wall:.3f}")
+    print(f"bench_artifacts,fit_to_load_speedup,"
+          f"{results['restore']['fit_to_load_speedup']:.1f}")
+    print(f"bench_artifacts,store_lookup_speedup,"
+          f"{results['store']['lookup_speedup']:.1f}")
+    print(f"bench_artifacts,store_hit_rate,{hit_rate:.2f}")
+    print(f"bench_artifacts,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -25,14 +25,49 @@ the analytic model — same protocol, same facade::
                          db_path="measure.jsonl",   # persistent timings
                          transport="pool", workers=4)   # N-worker pool
 
-For many concurrent tuning sessions over one shared worker pool, move up
-one altitude to :class:`repro.service.TuningService`.
+A fitted facade is a *deployable artifact* (PR 5): ``nv.save(dir)``
+persists the config, the agent's trained state and the oracle/transport
+recipe; ``NeuroVectorizer.load(dir)`` re-assembles it in a fresh process
+with bit-identical tuning decisions.  ``program_store="tiles.jsonl"``
+additionally memoizes finished :class:`TileProgram`s keyed by (site set,
+agent state fingerprint, oracle backend), so tuning a previously-seen
+site set is a lookup — zero agent inferences, zero oracle evaluations::
+
+    nv = NeuroVectorizer.load("artifact/", program_store="programs.jsonl")
+    prog = nv.tune_sites(sites)        # first call: inference + store put
+    prog = nv.tune_sites(sites)        # same sites: pure lookup
+
+For many concurrent tuning sessions over one shared worker pool (and one
+shared program store), move up one altitude to
+:class:`repro.service.TuningService`.
+
+Import tiers — ``__all__`` below documents the *supported* surface:
+
+* **facade + protocol tier** (use this): :class:`NeuroVectorizer`,
+  :class:`Agent`/:class:`Oracle`/:class:`MeasureTransport`, the
+  registries (``make_agent``/``make_measured_env``/``make_transport``),
+  :class:`TileProgram` + ``inject``/``program_speedup``, the artifact
+  layer (``save_agent``/``load_agent``/:class:`ProgramStore`) and the
+  service tier (:class:`TuningService`).
+* **legacy deep-import tier**: concrete agent classes and per-method
+  helpers (``PPOAgent``, ``brute_force_labels``, ``polly_action``, ...)
+  remain importable from here for existing callers, but new code should
+  reach them through the registries; they are deliberately *not* in
+  ``__all__`` any more.
 """
 from __future__ import annotations
 
+import json
+import os
+import shutil
+import time
 from typing import Optional, Sequence, Union
 
-from repro.configs.neurovec import DEFAULT, NeuroVecConfig
+from repro.artifacts import (ArtifactError, ProgramStore, agent_fingerprint,
+                             load_agent, program_key, save_agent,
+                             tune_through_store)
+from repro.configs.neurovec import (DEFAULT, NeuroVecConfig, cfg_from_dict,
+                                    cfg_to_dict)
 from repro.core.agents import (AGENT_NAMES, BaselineHeuristicAgent,
                                BruteForceAgent, DecisionTreeAgent, NNSAgent,
                                PPOAgent, PollyAgent, RandomAgent,
@@ -53,21 +88,29 @@ from repro.measure import (TRANSPORT_NAMES, CachedMeasureFn,
 from repro.service import SessionHandle, TuningService
 
 __all__ = [
-    "NeuroVectorizer", "Agent", "Oracle", "AGENT_NAMES", "make_agent",
-    "default_embed_fn",
-    "NeuroVecConfig", "DEFAULT", "ActionSpace", "CostModelEnv",
-    "MeasuredEnv", "set_strict_actions",
-    "MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_measured_env",
-    "MeasureTransport", "AsyncOracle", "InProcessTransport",
-    "WorkerPoolTransport", "TransportMeasureFn", "make_transport",
-    "TRANSPORT_NAMES", "TuningService", "SessionHandle",
-    "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
-    "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
-    "brute_force_action", "brute_force_labels", "brute_force_costs",
-    "n_evaluations", "polly_action",
+    # -- facade + protocol tier: the supported public surface ---------------
+    "NeuroVectorizer",
+    "Agent", "Oracle", "MeasureTransport", "AsyncOracle",
+    "AGENT_NAMES", "make_agent", "default_embed_fn",
+    "NeuroVecConfig", "DEFAULT", "ActionSpace",
+    "CostModelEnv", "MeasuredEnv", "set_strict_actions",
+    "make_measured_env", "make_transport", "TRANSPORT_NAMES",
     "TileProgram", "baseline_program", "inject", "program_speedup",
-    "tune", "tune_step_fn", "extract_sites", "extract_arch_sites",
+    "extract_sites", "extract_arch_sites",
+    "TuningService", "SessionHandle",
+    # artifact layer (PR 5): checkpoints + warm-start program store
+    "ArtifactError", "save_agent", "load_agent", "agent_fingerprint",
+    "ProgramStore", "program_key",
+    # NOTE: the legacy deep-import tier (concrete agent classes
+    # PPOAgent/BruteForceAgent/..., brute_force_* helpers, polly_action,
+    # MeasureRunner/MeasureDB/CachedMeasureFn/InProcessTransport/
+    # WorkerPoolTransport/TransportMeasureFn, tune/tune_step_fn) stays
+    # importable from this module for existing callers but is no longer
+    # part of the documented surface.
 ]
+
+
+_FACADE_FORMAT = "neurovectorizer-facade"
 
 
 class NeuroVectorizer:
@@ -111,11 +154,21 @@ class NeuroVectorizer:
     oracle_kwargs: extra :class:`repro.measure.MeasureRunner` options for
             ``oracle="measured"`` (``reps=``, ``warmup=``, ``max_dim=``,
             ``interpret=``...) — applied per worker under the pool.
+    program_store: a :class:`ProgramStore` (borrowed) or a path (opened
+            and owned by this facade): finished tile programs are
+            memoized per (site set, agent state, oracle backend), so
+            ``tune_sites`` on a previously-tuned site set is a pure
+            lookup — zero agent inferences, zero oracle evaluations.
+            ``agent_inferences`` / ``store_hits`` / ``store_misses``
+            count what actually ran.
 
     A facade that built a measured oracle owns its transport: call
     :meth:`close` (or use the facade as a context manager) to release
-    pool workers and the DB file handle.  For many concurrent sessions
-    over one shared pool, use :class:`repro.service.TuningService`.
+    pool workers and the DB/store file handles.  A closed facade raises
+    ``RuntimeError`` on further ``fit``/``tune`` calls rather than
+    surfacing an opaque queue error from the released transport.  For
+    many concurrent sessions over one shared pool, use
+    :class:`repro.service.TuningService`.
     """
 
     def __init__(self, cfg: NeuroVecConfig = DEFAULT,
@@ -125,9 +178,11 @@ class NeuroVectorizer:
                  oracle_kwargs: Optional[dict] = None,
                  transport: Union[str, MeasureTransport, None] = None,
                  workers: Optional[int] = None,
+                 program_store: Union[str, ProgramStore, None] = None,
                  **agent_kwargs):
         self.cfg = cfg
         self._owns_oracle = False
+        self._closed = False
         if oracle == "measured":
             self.oracle: Oracle = make_measured_env(
                 cfg, db_path=db_path, seed=seed, transport=transport,
@@ -150,6 +205,27 @@ class NeuroVectorizer:
         self.agent: Agent = (make_agent(agent, cfg, seed=seed,
                                         **agent_kwargs)
                              if isinstance(agent, str) else agent)
+        self._owns_store = isinstance(program_store, str)
+        self.program_store: Optional[ProgramStore] = (
+            ProgramStore(program_store) if self._owns_store
+            else program_store)
+        # warm-start observability: how many sites actually went through
+        # agent.act vs. were answered from the store
+        self.agent_inferences = 0
+        self.store_hits = 0
+        self.store_misses = 0
+        # the re-assembly recipe nv.save() persists (strings only; a
+        # hand-built oracle/transport/agent is recorded as non-portable)
+        self._spec = {
+            "agent": agent if isinstance(agent, str) else None,
+            "agent_kwargs": agent_kwargs if isinstance(agent, str) else {},
+            "oracle": (oracle if isinstance(oracle, str) or oracle is None
+                       else "custom"),
+            "transport": (transport if isinstance(transport, str)
+                          or transport is None else "custom"),
+            "workers": workers, "db_path": db_path,
+            "oracle_kwargs": dict(oracle_kwargs or {}), "seed": seed,
+        }
 
     # -- training ----------------------------------------------------------
     def fit(self, corpus_sites: Sequence, **fit_kwargs) -> "NeuroVectorizer":
@@ -157,6 +233,7 @@ class NeuroVectorizer:
         labelling, or a no-op for search-free methods).  Extra kwargs flow
         to the agent (e.g. ``total_steps=`` for ppo, ``labels=`` for
         nns/dtree)."""
+        self._check_open("fit")
         self.agent.fit(corpus_sites, self.oracle, **fit_kwargs)
         return self
 
@@ -167,7 +244,18 @@ class NeuroVectorizer:
         return self.tune_sites(extract_sites(step_fn, *abstract_args))
 
     def tune_sites(self, sites: Sequence) -> TileProgram:
-        return tune(list(sites), self.agent, self.oracle.space)
+        self._check_open("tune")
+        sites = list(sites)
+        prog, hit = tune_through_store(sites, self.agent, self.oracle.space,
+                                       self.oracle, self.program_store)
+        if self.program_store is not None and sites:
+            if hit:
+                self.store_hits += 1
+            else:
+                self.store_misses += 1
+        if not hit:
+            self.agent_inferences += len(sites)
+        return prog
 
     def tune_arch(self, arch: str, batch: int = 8,
                   seq: int = 2048) -> TileProgram:
@@ -189,12 +277,151 @@ class NeuroVectorizer:
         priced by this facade's oracle semantics."""
         return program_speedup(program, list(sites), env=self.oracle)
 
+    # -- persistence (PR 5) -------------------------------------------------
+    def save(self, path: str) -> str:
+        """Persist this facade as an artifact directory: the config, the
+        agent's full trained state (``repro.artifacts`` format, atomic +
+        fingerprinted) and the oracle/transport re-assembly recipe.
+        Returns the agent-state fingerprint.
+
+        A hand-built :class:`Oracle`/transport instance cannot be
+        serialized — :meth:`load` will then require an explicit
+        ``oracle=``/``transport=`` override."""
+        spec = dict(self._spec)
+        if spec["agent"] is None:
+            # an agent passed as an instance: record its registry name so
+            # load() can reconstruct it before restoring the state.  The
+            # embedding-based methods are the exception — a hand-passed
+            # embed_fn is a live callable outside state_dict(), and
+            # reconstructing with the default embedder would *silently*
+            # change act(); refuse rather than break the bitwise guarantee.
+            if isinstance(self.agent, (NNSAgent, DecisionTreeAgent)):
+                raise ArtifactError(
+                    f"cannot record the construction of a hand-built "
+                    f"{type(self.agent).__name__} (its embed_fn is a live "
+                    f"callable) — construct via agent="
+                    f"{self.agent.name!r} on the facade, or pass agent= "
+                    f"to NeuroVectorizer.load()")
+            spec["agent"] = self.agent.name
+        payload = {"format": _FACADE_FORMAT, "version": 1,
+                   "cfg": cfg_to_dict(self.cfg), **spec}
+        try:
+            blob = json.dumps(payload, indent=1)
+        except TypeError as e:
+            raise ArtifactError(
+                f"facade spec is not serializable ({e}); agent_kwargs and "
+                f"oracle_kwargs must be plain JSON values to save") from e
+        path = str(path)
+        tmp = path.rstrip(os.sep) + f".tmp-{os.getpid()}"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        fp = save_agent(self.agent, os.path.join(tmp, "agent"))
+        with open(os.path.join(tmp, "facade.json"), "w") as f:
+            f.write(blob)
+        # manifest last: a partial directory is never restorable
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"format": _FACADE_FORMAT, "version": 1,
+                       "agent": payload["agent"], "agent_fingerprint": fp,
+                       "time": time.time()}, f, indent=1)
+        # never destroy a valid artifact before its replacement has fully
+        # landed: move the old directory aside, swing the new one in, then
+        # drop the old — a crash mid-save leaves either the old or the new
+        # artifact restorable at `path` (or the old one parked at .old-*)
+        old = None
+        if os.path.isdir(path):
+            old = path.rstrip(os.sep) + f".old-{os.getpid()}"
+            shutil.rmtree(old, ignore_errors=True)
+            os.replace(path, old)
+        os.replace(tmp, path)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
+        return fp
+
+    @classmethod
+    def load(cls, path: str,
+             agent: Optional[Agent] = None,
+             oracle: Union[str, Oracle, None] = None,
+             transport: Union[str, MeasureTransport, None] = None,
+             workers: Optional[int] = None, db_path: Optional[str] = None,
+             program_store: Union[str, ProgramStore, None] = None,
+             seed: Optional[int] = None, **agent_kwargs
+             ) -> "NeuroVectorizer":
+        """Re-assemble a facade saved by :meth:`save` in a (possibly
+        fresh) process: config + agent construction + verified state
+        restore + oracle/transport from the recorded recipe.  The loaded
+        facade's ``tune_sites`` is bit-identical to the saver's.
+
+        Keyword overrides replace the recorded recipe (e.g. point
+        ``db_path`` at a local timing DB, or attach a shared
+        ``program_store``); ``agent=`` supplies a pre-constructed agent
+        to restore the state into (required when the saved agent cannot
+        be rebuilt from the registry, e.g. nns/dtree with a custom
+        ``embed_fn``), and ``oracle=``/``transport=`` are required when
+        the original facade was built around hand-built instances."""
+        path = str(path)
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            raise ArtifactError(f"no restorable facade artifact at "
+                                f"{path!r} (manifest.json missing)")
+        with open(os.path.join(path, "facade.json")) as f:
+            spec = json.load(f)
+        if spec.get("format") != _FACADE_FORMAT:
+            raise ArtifactError(f"{path!r} is not a facade artifact "
+                                f"(format={spec.get('format')!r})")
+        cfg = cfg_from_dict(spec["cfg"])
+        if spec["oracle"] == "custom" and oracle is None:
+            raise ArtifactError(
+                "this artifact was saved around a hand-built Oracle, which "
+                "cannot be re-assembled automatically — pass oracle= to "
+                "load()")
+        oracle = spec["oracle"] if oracle is None else oracle
+        kw = {}
+        if oracle == "measured":
+            # the transport only matters once the resolved oracle needs
+            # one — an oracle='model' override never reads it
+            if spec["transport"] == "custom" and transport is None:
+                raise ArtifactError(
+                    "this artifact was saved around a hand-built "
+                    "transport — pass transport= to load()")
+            kw = {"transport": (spec["transport"] if transport is None
+                                else transport),
+                  "workers": spec["workers"] if workers is None else workers,
+                  "db_path": spec["db_path"] if db_path is None else db_path,
+                  "oracle_kwargs": spec["oracle_kwargs"] or None}
+        merged_kwargs = {**spec["agent_kwargs"], **agent_kwargs}
+        nv = cls(cfg, agent=spec["agent"] if agent is None else agent,
+                 oracle=oracle,
+                 seed=spec["seed"] if seed is None else seed,
+                 program_store=program_store,
+                 **kw, **(merged_kwargs if agent is None else {}))
+        load_agent(os.path.join(path, "agent"), agent=nv.agent)
+        if isinstance(nv.agent, BruteForceAgent):
+            # brute captures a live oracle at fit time; re-bind ours so a
+            # loaded exhaustive search prices tiles with the same oracle
+            nv.agent.oracle = nv.oracle
+        return nv
+
     # -- lifecycle ---------------------------------------------------------
+    def _check_open(self, verb: str) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"cannot {verb}: this NeuroVectorizer is closed (its "
+                f"transport/store handles were released) — build a new "
+                f"facade or NeuroVectorizer.load() a saved one")
+
     def close(self) -> None:
         """Release the measured oracle's transport (pool workers, DB file
-        handle) when this facade built it.  No-op otherwise; idempotent."""
+        handle) and an owned program store, and mark the facade closed:
+        subsequent ``fit``/``tune`` calls raise a clear ``RuntimeError``
+        instead of an opaque error from the released transport.
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
         if self._owns_oracle:
             self.oracle.measure_fn.transport.close()
+        if self._owns_store and self.program_store is not None:
+            self.program_store.close()
 
     def __enter__(self) -> "NeuroVectorizer":
         return self

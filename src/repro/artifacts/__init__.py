@@ -1,0 +1,31 @@
+"""``repro.artifacts`` — persistent tuning artifacts (PR 5).
+
+Everything a tuning run produces that is worth keeping lives here, in two
+layers mirroring what the paper amortizes:
+
+* **agent checkpoints** (:mod:`repro.artifacts.agentio`) — a fitted
+  agent's ``state_dict`` as an atomic, fingerprinted on-disk directory
+  (``save_agent`` / ``load_agent``); the trained-once policy becomes the
+  deployable artifact.
+* **tuned programs** (:mod:`repro.artifacts.store`) —
+  :class:`ProgramStore`, an append-only store of finished
+  :class:`~repro.core.vectorizer.TileProgram`s keyed by (site set, agent
+  state fingerprint, oracle/backend fingerprint), so a previously-seen
+  tuning question is a lookup, not an inference pass.
+
+Consumed by ``NeuroVectorizer.save/load`` + ``program_store=``,
+``TuningService.open_session(agent_ckpt=..., program_store=...)`` and
+``launch/serve.py --agent-ckpt --program-store``.
+"""
+from repro.artifacts.agentio import (ARTIFACT_FORMAT, ArtifactError,
+                                     agent_fingerprint, fingerprint_state,
+                                     load_agent, read_agent_state,
+                                     save_agent)
+from repro.artifacts.store import (ProgramStore, oracle_fingerprint,
+                                   program_key, sites_fingerprint,
+                                   tune_through_store)
+
+__all__ = ["ArtifactError", "ARTIFACT_FORMAT", "save_agent", "load_agent",
+           "read_agent_state", "agent_fingerprint", "fingerprint_state",
+           "ProgramStore", "program_key", "oracle_fingerprint",
+           "sites_fingerprint", "tune_through_store"]

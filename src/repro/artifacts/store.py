@@ -1,0 +1,198 @@
+"""``ProgramStore`` — persistent, append-only store of tuned tile programs.
+
+The measurement DB (PR 3) made *timings* survive the process; this is the
+same discipline one level up, for *decisions*: once an agent has tuned a
+set of kernel sites, every later process asking the same question gets the
+answer by lookup — zero agent inferences, zero oracle evaluations (the
+"tune once, look up everywhere" the ROADMAP's serving story needs, and the
+cached-verified-result stance of LLM-Vectorizer).
+
+A store entry is only valid for the exact question it answered, so the key
+fingerprints all three coordinates (mirroring ``MeasureDB.make_key``):
+
+* the **site set** — sorted ``site.key()``s, hashed (order-insensitive);
+* the **agent** — registry name + SHA-256 of its deployable
+  ``state_dict`` (:func:`~repro.artifacts.agentio.agent_fingerprint`), so
+  further training invalidates exactly the entries it should;
+* the **oracle/backend** — oracle type + config hash, plus the
+  measurement transport's ``backend_key`` when one is attached (a program
+  tuned against interpret-mode timings must not be served for a TPU
+  oracle).
+
+On disk it is JSON-lines, append-only: corrupt lines are skipped and
+counted (never fatal — the store degrades to re-tuning), duplicate keys
+resolve last-wins on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Optional, Sequence, Tuple
+
+from repro.artifacts.agentio import agent_fingerprint
+from repro.core.vectorizer import TileProgram, tune
+
+
+def sites_fingerprint(sites: Sequence) -> str:
+    """Order-insensitive hash of a site set (sorted ``site.key()``s)."""
+    blob = "\n".join(sorted(s.key() for s in sites))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def oracle_fingerprint(oracle) -> str:
+    """Oracle identity for the store key: type + config hash, plus the
+    transport's measurement-conditions fingerprint when one is attached.
+    :class:`~repro.core.protocols.AsyncOracle` is unwrapped."""
+    from repro.core.protocols import AsyncOracle
+
+    transport = None
+    if isinstance(oracle, AsyncOracle):
+        transport = oracle.transport
+        oracle = oracle.oracle
+    if transport is None:
+        transport = getattr(getattr(oracle, "measure_fn", None),
+                            "transport", None)
+    cfg = getattr(oracle, "cfg", None)
+    try:
+        from repro.configs.neurovec import cfg_to_dict
+        cfg_fp = hashlib.sha256(json.dumps(
+            cfg_to_dict(cfg), sort_keys=True).encode()).hexdigest()[:12]
+    except (TypeError, AttributeError):
+        cfg_fp = f"cfg-{type(cfg).__name__}"
+    base = f"{type(oracle).__name__}:{cfg_fp}"
+    if transport is not None:
+        base += f":{transport.backend_key}"
+    return base
+
+
+def program_key(sites: Sequence, agent, oracle) -> str:
+    """The full store key: (site set, agent identity, oracle/backend).
+
+    The agent fingerprint is recomputed from ``state_dict()`` on every
+    call rather than cached: nothing in the protocol announces state
+    mutation (callers may ``fit`` the agent directly), and a stale
+    fingerprint would serve a *wrong program* — correctness over the
+    hash cost, which is linear in policy size and benchmarked by
+    ``benchmarks/bench_artifacts.py``."""
+    return (f"{sites_fingerprint(sites)}"
+            f"|{agent.name}:{agent_fingerprint(agent)[:16]}"
+            f"|{oracle_fingerprint(oracle)}")
+
+
+class ProgramStore:
+    """Append-only JSONL store: ``program_key -> TileProgram`` tiles.
+
+    ``hits``/``misses`` count lookups through :meth:`get` (what the
+    facade/service report as their warm-start rate);
+    ``skipped_lines`` counts unparseable records ignored at load.
+
+    Thread-safe: one store is shared by every concurrent
+    :class:`~repro.service.TuningService` session (their tunes run on a
+    thread pool), so lookups, appends and counters are serialized under
+    one lock — the same discipline the transports apply to the
+    :class:`~repro.measure.db.MeasureDB`.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._mem: dict = {}            # key -> {site_key: (tiles...)}
+        self.hits = 0
+        self.misses = 0
+        self.skipped_lines = 0
+        self._fh = None
+        self._lock = threading.Lock()
+        self._load()
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    key = rec["k"]
+                    tiles = {str(sk): tuple(int(x) for x in tv)
+                             for sk, tv in rec["v"].items()}
+                except (ValueError, KeyError, TypeError, AttributeError):
+                    self.skipped_lines += 1
+                    continue
+                self._mem[key] = tiles          # duplicate keys: last wins
+
+    def _append(self, key: str, tiles: dict) -> None:
+        if self._fh is None:
+            parent = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(parent, exist_ok=True)
+            self._fh = open(self.path, "a")
+        rec = {"k": key, "v": {sk: list(tv) for sk, tv in tiles.items()}}
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    # -- mapping -------------------------------------------------------------
+    def get(self, key: str) -> Optional[TileProgram]:
+        with self._lock:
+            tiles = self._mem.get(key)
+            if tiles is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return TileProgram(dict(tiles))
+
+    def put(self, key: str, program: TileProgram) -> None:
+        tiles = {str(sk): tuple(int(x) for x in tv)
+                 for sk, tv in program.tiles.items()}
+        with self._lock:
+            self._append(key, tiles)
+            self._mem[key] = tiles
+
+    def stats(self) -> dict:
+        with self._lock:
+            n = self.hits + self.misses
+            return {"entries": len(self._mem), "hits": self.hits,
+                    "misses": self.misses,
+                    "hit_rate": (self.hits / n) if n else 0.0,
+                    "skipped_lines": self.skipped_lines}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._mem
+
+    def __enter__(self) -> "ProgramStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def tune_through_store(sites: Sequence, agent, space, oracle,
+                       store: Optional[ProgramStore]
+                       ) -> Tuple[TileProgram, bool]:
+    """The one warm-start code path the facade and the service share:
+    look the site set up in ``store``, tune only on a miss (appending the
+    fresh program).  Returns ``(program, hit)`` — on a hit the agent and
+    the oracle are never touched."""
+    sites = list(sites)
+    if store is None or not sites:
+        return tune(sites, agent, space), False
+    key = program_key(sites, agent, oracle)
+    prog = store.get(key)
+    if prog is not None:
+        return prog, True
+    prog = tune(sites, agent, space)
+    store.put(key, prog)
+    return prog, False

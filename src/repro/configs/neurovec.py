@@ -1,7 +1,7 @@
 """The paper's own configuration: NeuroVectorizer RL hyperparameters
 (§4 Evaluation) mapped onto the TPU tile-tuning action space (DESIGN.md §2).
 """
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field, fields
 from typing import Tuple
 
 
@@ -54,3 +54,21 @@ class NeuroVecConfig:
 
 
 DEFAULT = NeuroVecConfig()
+
+
+def cfg_to_dict(cfg: NeuroVecConfig) -> dict:
+    """JSON-serializable snapshot of a config (tuples become lists) —
+    the on-disk form used by the ``repro.artifacts`` persistence layer."""
+    return asdict(cfg)
+
+
+def cfg_from_dict(d: dict) -> NeuroVecConfig:
+    """Inverse of :func:`cfg_to_dict`; restores tuple-typed fields and
+    rejects unknown keys (a config written by a newer schema should fail
+    loudly, not be silently truncated)."""
+    known = {f.name for f in fields(NeuroVecConfig)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(f"unknown NeuroVecConfig fields: {unknown}")
+    return NeuroVecConfig(**{k: tuple(v) if isinstance(v, list) else v
+                             for k, v in d.items()})

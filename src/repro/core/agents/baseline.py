@@ -20,6 +20,16 @@ class BaselineHeuristicAgent:
             self.space = oracle.space
         return self
 
+    def state_dict(self) -> dict:
+        """Versioned empty state (the fixed heuristic learns nothing)."""
+        from repro.core.protocols import AGENT_STATE_VERSION
+        return {"version": AGENT_STATE_VERSION, "name": self.name}
+
+    def load_state(self, state: dict) -> "BaselineHeuristicAgent":
+        from repro.core.protocols import check_agent_state
+        check_agent_state(state, self.name)
+        return self
+
     def act(self, sites, *, sample: bool = False) -> np.ndarray:
         if self.space is None:
             raise RuntimeError("BaselineHeuristicAgent.act before fit "

@@ -81,6 +81,18 @@ class BruteForceAgent:
         self.oracle = oracle
         return self
 
+    def state_dict(self) -> dict:
+        """Versioned empty state: the search has nothing learned to
+        persist.  The captured oracle is a live object — a loading
+        facade re-binds its own oracle (``NeuroVectorizer.load``)."""
+        from repro.core.protocols import AGENT_STATE_VERSION
+        return {"version": AGENT_STATE_VERSION, "name": self.name}
+
+    def load_state(self, state: dict) -> "BruteForceAgent":
+        from repro.core.protocols import check_agent_state
+        check_agent_state(state, self.name)
+        return self
+
     def act(self, sites, *, sample: bool = False) -> np.ndarray:
         return brute_force_labels(self._ensure_oracle(),
                                   sites).astype(np.int64)

@@ -10,6 +10,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.protocols import AGENT_STATE_VERSION, check_agent_state
+
 
 @dataclass
 class _Node:
@@ -64,6 +66,23 @@ def _predict_one(node, x):
     return node.label
 
 
+def _node_to_dict(node: _Node) -> dict:
+    d = {"f": node.feature, "t": node.thresh, "label": node.label}
+    if node.feature >= 0:
+        d["left"] = _node_to_dict(node.left)
+        d["right"] = _node_to_dict(node.right)
+    return d
+
+
+def _node_from_dict(d: dict) -> _Node:
+    node = _Node(feature=int(d["f"]), thresh=float(d["t"]),
+                 label=int(d["label"]))
+    if node.feature >= 0:
+        node.left = _node_from_dict(d["left"])
+        node.right = _node_from_dict(d["right"])
+    return node
+
+
 class DecisionTreeAgent:
     """``fit(sites, oracle)`` brute-force-labels the training sites via
     the oracle's cost grid (pass ``labels=`` to reuse precomputed ones)
@@ -102,6 +121,27 @@ class DecisionTreeAgent:
             self.trees[kind] = _build(X[idx], flat.astype(np.int64),
                                       n_classes, 0, self.max_depth,
                                       self.min_samples, rng)
+        return self
+
+    def state_dict(self) -> dict:
+        """The grown per-kind trees plus the action-space config they
+        unflatten through (the constructor never sees a cfg, so ``act``
+        after ``load_state`` must not depend on a later ``fit``)."""
+        from repro.configs.neurovec import cfg_to_dict
+        st = {"version": AGENT_STATE_VERSION, "name": self.name,
+              "trees": {k: _node_to_dict(t) for k, t in self.trees.items()},
+              "space_cfg": (cfg_to_dict(self.space.cfg)
+                            if self.space is not None else None)}
+        return st
+
+    def load_state(self, state: dict) -> "DecisionTreeAgent":
+        check_agent_state(state, self.name)
+        from repro.configs.neurovec import cfg_from_dict
+        from repro.core.env import ActionSpace
+        self.trees = {k: _node_from_dict(d)
+                      for k, d in state["trees"].items()}
+        self.space = (ActionSpace(cfg_from_dict(state["space_cfg"]))
+                      if state["space_cfg"] is not None else None)
         return self
 
     def act(self, sites, *, sample: bool = False) -> np.ndarray:

@@ -6,6 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.agents.brute import brute_force_labels
+from repro.core.protocols import AGENT_STATE_VERSION, check_agent_state
 
 
 class NNSAgent:
@@ -35,6 +36,31 @@ class NNSAgent:
     @staticmethod
     def _norm(x):
         return x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
+
+    def state_dict(self) -> dict:
+        """The frozen training-set embeddings + brute-force labels (the
+        whole fitted model; the embed_fn itself is reconstructed from the
+        construction seed, not serialized)."""
+        st = {"version": AGENT_STATE_VERSION, "name": self.name,
+              "fitted": self.keys is not None}
+        if self.keys is not None:
+            st["keys"] = np.asarray(self.keys)
+            st["labels"] = np.asarray(self.labels, np.int64)
+            st["train_kinds"] = [str(k) for k in self.train_kinds]
+        return st
+
+    def load_state(self, state: dict) -> "NNSAgent":
+        check_agent_state(state, self.name)
+        if state["fitted"]:
+            # keys keep their saved dtype: act() mixes them into float
+            # matmuls and a silent up/downcast could perturb argmax ties
+            self.keys = np.asarray(state["keys"])
+            self.labels = np.asarray(state["labels"], np.int64)
+            self.train_kinds = np.array([str(k)
+                                         for k in state["train_kinds"]])
+        else:
+            self.keys = self.labels = self.train_kinds = None
+        return self
 
     def act(self, sites, *, sample: bool = False) -> np.ndarray:
         if self.keys is None:

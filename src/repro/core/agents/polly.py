@@ -102,6 +102,17 @@ class PollyAgent:
             self.space = oracle.space
         return self
 
+    def state_dict(self) -> dict:
+        """Versioned empty state (search-free; the action space comes
+        from construction via the registry)."""
+        from repro.core.protocols import AGENT_STATE_VERSION
+        return {"version": AGENT_STATE_VERSION, "name": self.name}
+
+    def load_state(self, state: dict) -> "PollyAgent":
+        from repro.core.protocols import check_agent_state
+        check_agent_state(state, self.name)
+        return self
+
     def act(self, sites, *, sample: bool = False) -> np.ndarray:
         if self.space is None:
             raise RuntimeError("PollyAgent.act before fit (no ActionSpace)")

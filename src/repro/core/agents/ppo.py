@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs.neurovec import NeuroVecConfig
 from repro.core import embedding as emb
 from repro.core.env import ActionSpace, CostModelEnv
+from repro.core.protocols import AGENT_STATE_VERSION, check_agent_state
 from repro.models.compute import KernelSite
 
 _KIND_IDX = {"matmul": 0, "attention": 1, "chunk_scan": 2}
@@ -444,6 +445,38 @@ class PPOAgent:
         for h in self.history[first:]:            # one sync at the end
             h["loss"] = float(h["loss"])
         return self.history
+
+    # -- persistence (Agent protocol) ---------------------------------------
+    def state_dict(self) -> dict:
+        """Policy + value params, the Adam state, and the sampling key —
+        the full trained artifact (paper §4: train once, deploy greedy)."""
+        return {"version": AGENT_STATE_VERSION, "name": self.name,
+                "mode": self.mode, "lr": float(self._lr),
+                "params": jax.tree.map(np.asarray, self.params),
+                "opt": jax.tree.map(np.asarray, self.opt),
+                "rng_key": np.asarray(self._key)}
+
+    def load_state(self, state: dict) -> "PPOAgent":
+        check_agent_state(state, self.name)
+        if state["mode"] != self.mode:
+            raise ValueError(f"state was trained in mode {state['mode']!r}; "
+                             f"this agent is {self.mode!r} — construct with "
+                             f"make_agent('ppo', cfg, mode=...) to match")
+        # restore into the existing pytree structure: shapes must agree
+        # (same cfg/head_sizes), values are taken verbatim from the state
+        for attr in ("params", "opt"):
+            have = jax.tree_util.tree_leaves(getattr(self, attr))
+            new = jax.tree_util.tree_leaves(state[attr])
+            if len(have) != len(new) or any(
+                    tuple(np.shape(a)) != tuple(np.shape(b))
+                    for a, b in zip(have, new)):
+                raise ValueError(f"{attr} structure mismatch: the state was "
+                                 f"saved under a different config/network")
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt = jax.tree.map(jnp.asarray, state["opt"])
+        self._key = jnp.asarray(state["rng_key"], jnp.uint32)
+        self._lr = float(state["lr"])
+        return self
 
     # -- embedding for downstream supervised methods (paper §3.5) ----------
     def code_vectors(self, sites) -> np.ndarray:

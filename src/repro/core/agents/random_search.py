@@ -24,6 +24,21 @@ class RandomAgent:
             self.space = oracle.space
         return self
 
+    def state_dict(self) -> dict:
+        """The seed is the whole deployable state: ``act(sample=False)``
+        redraws from it, so restoring it reproduces deployment actions
+        exactly.  The exploration stream (``sample=True``) restarts."""
+        from repro.core.protocols import AGENT_STATE_VERSION
+        return {"version": AGENT_STATE_VERSION, "name": self.name,
+                "seed": int(self.seed)}
+
+    def load_state(self, state: dict) -> "RandomAgent":
+        from repro.core.protocols import check_agent_state
+        check_agent_state(state, self.name)
+        self.seed = int(state["seed"])
+        self.rng = np.random.default_rng(self.seed)
+        return self
+
     def act(self, sites, *, sample: bool = False) -> np.ndarray:
         if self.space is None:
             raise RuntimeError("RandomAgent.act before fit (no ActionSpace)")

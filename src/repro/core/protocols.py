@@ -12,6 +12,13 @@ that pluggability formal:
   per-head action indices.  ``sample=False`` must be deterministic (the
   deployment mode, paper §4.2); every returned index must be in range for
   its site's kind (strict-actions compliant — no reliance on clamping).
+  A fitted agent is a *deployable artifact* (PR 5): ``state_dict()``
+  snapshots everything ``act`` depends on into plain numpy/python data
+  and ``load_state(state)`` restores it into a freshly constructed agent
+  of the same registry name, such that the loaded agent's
+  ``act(sites, sample=False)`` is bitwise-equal to the original's.
+  Search-free methods return a versioned empty state.  The on-disk
+  format (atomic, fingerprinted) lives in :mod:`repro.artifacts`.
 
 * :class:`Oracle` — a reward source.  The batched surface grown in PR 1
   (``costs_batch`` / ``rewards_batch`` / ``speedups_batch`` / ``cost_grid``
@@ -51,6 +58,27 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+# Schema version of every agent's ``state_dict``.  Bumped when a state
+# layout changes incompatibly; ``check_agent_state`` rejects mismatches
+# so an old process never mis-reads a newer artifact (or vice versa).
+AGENT_STATE_VERSION = 1
+
+
+def check_agent_state(state: dict, expect_name: str) -> None:
+    """Shared validation for ``Agent.load_state`` implementations:
+    the state must carry the matching registry name and a supported
+    schema version.  Raises ``ValueError`` with a precise message."""
+    if not isinstance(state, dict):
+        raise ValueError(f"agent state must be a dict, got {type(state)}")
+    name = state.get("name")
+    if name != expect_name:
+        raise ValueError(f"agent state is for {name!r}, cannot load into "
+                         f"a {expect_name!r} agent")
+    version = state.get("version")
+    if version != AGENT_STATE_VERSION:
+        raise ValueError(f"agent state version {version!r} is not the "
+                         f"supported {AGENT_STATE_VERSION}")
+
 
 @runtime_checkable
 class Agent(Protocol):
@@ -71,6 +99,22 @@ class Agent(Protocol):
         ``sample=False`` (default, the deployment mode) must be
         deterministic; ``sample=True`` may draw from the method's
         exploration distribution."""
+        ...
+
+    def state_dict(self) -> dict:
+        """Everything ``act`` depends on, as a nested dict of plain
+        python values and numpy arrays, carrying ``name`` and
+        ``version`` (:data:`AGENT_STATE_VERSION`).  Must be stable:
+        saving twice without intervening training yields identical
+        state (the ``repro.artifacts`` fingerprint relies on it)."""
+        ...
+
+    def load_state(self, state: dict) -> "Agent":
+        """Restore a ``state_dict`` snapshot into this (compatibly
+        constructed) agent; returns ``self`` for chaining.  Must
+        validate name/version (``check_agent_state``) and leave the
+        agent bitwise-equivalent to the one that produced ``state``
+        under ``act(sites, sample=False)``."""
         ...
 
 

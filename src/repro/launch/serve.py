@@ -17,11 +17,19 @@ PATH`` persists the timings so repeat invocations re-time nothing.
 ``--transport pool --workers N`` fans the measurements out to N
 subprocess workers (the ``WorkerPoolTransport``) instead of timing in
 this process.
+
+Warm starts (``repro.artifacts``): ``--agent-ckpt DIR`` restores a
+fitted agent saved by ``nv.save()``/``save_agent`` and skips the fit
+entirely (tune-only serving — the paper's train-once deployment);
+``--program-store PATH`` memoizes finished tile programs, so a serving
+process that has seen this site set before performs zero agent
+inferences.
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import sys
 import time
 
 import jax
@@ -30,6 +38,20 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models.lm import build_model
 from repro.train.steps import make_prefill_step, make_serve_step
+
+
+def _warn_missing_tiles(prog, sites) -> list:
+    """Sites a loaded ``TileProgram`` does not cover run at baseline
+    tiles; say so on stderr (with the site names) instead of silently
+    degrading.  Returns the missing site names."""
+    missing = [s for s in sites if s.key() not in prog.tiles]
+    # names dedup'd for readability (prefill/decode share site names)
+    names = sorted({s.site for s in missing})
+    if missing:
+        print(f"[serve] WARNING: tile plan covers {len(sites) - len(missing)}"
+              f"/{len(sites)} extracted sites; these run at baseline "
+              f"tiles: {', '.join(names)}", file=sys.stderr)
+    return names
 
 
 def _tile_plan(args, model, params, batch, cache):
@@ -47,6 +69,7 @@ def _tile_plan(args, model, params, batch, cache):
 
     if args.tiles:
         prog = api.TileProgram.load(args.tiles)
+        _warn_missing_tiles(prog, sites)
         nv = None
     else:
         oracle_kw = {}
@@ -56,10 +79,20 @@ def _tile_plan(args, model, params, batch, cache):
                              workers=(args.workers
                                       if args.transport == "pool" else None),
                              oracle_kwargs=dict(reps=args.measure_reps))
-        nv = api.NeuroVectorizer(agent=args.autotune, **oracle_kw)
-        fit_kw = ({"total_steps": args.autotune_steps}
-                  if args.autotune == "ppo" else {})
-        nv.fit(sites, **fit_kw)
+        nv = api.NeuroVectorizer(agent=args.autotune,
+                                 program_store=args.program_store,
+                                 **oracle_kw)
+        if args.agent_ckpt:
+            # warm start: the checkpointed policy replaces the fit
+            api.load_agent(args.agent_ckpt, agent=nv.agent)
+            if isinstance(nv.agent, api.BruteForceAgent):
+                nv.agent.oracle = nv.oracle
+            print(f"[serve] agent warm-start: {args.agent_ckpt} "
+                  f"(fit skipped)")
+        else:
+            fit_kw = ({"total_steps": args.autotune_steps}
+                      if args.autotune == "ppo" else {})
+            nv.fit(sites, **fit_kw)
         prog = nv.tune_sites(sites)
         if args.save_tiles:
             prog.save(args.save_tiles)
@@ -68,13 +101,19 @@ def _tile_plan(args, model, params, batch, cache):
     how = "measured" if args.measured and nv is not None else "modelled"
     print(f"[serve] tile plan: {len(prog.tiles)} tiles over {len(sites)} "
           f"sites, {how} speedup {sp:.2f}x")
+    if nv is not None and args.program_store:
+        st = nv.program_store.stats()
+        print(f"[serve] program store: {st['hits']} hits, "
+              f"{st['misses']} misses, {nv.agent_inferences} agent "
+              f"inferences ({st['entries']} stored programs)")
     if args.measured and nv is not None:
         t = env.measure_fn.transport
         st = t.stats()
         print(f"[serve] measurements: {st['timed_pairs']} timed, "
               f"{st['hits']} DB hits, {st['coalesced']} coalesced "
               f"({t.backend_key})")
-        nv.close()                      # release pool workers / DB handle
+    if nv is not None:
+        nv.close()                      # release pool workers / DB handles
     return prog
 
 
@@ -107,6 +146,13 @@ def main(argv=None):
                          "subprocess worker pool (repro.measure)")
     ap.add_argument("--workers", type=int, default=2,
                     help="pool size for --transport pool")
+    ap.add_argument("--agent-ckpt", default=None,
+                    help="warm-start --autotune from a saved agent "
+                         "artifact directory (repro.artifacts; skips fit)")
+    ap.add_argument("--program-store", default=None,
+                    help="persistent ProgramStore path: previously-tuned "
+                         "site sets are answered by lookup (zero agent "
+                         "inferences)")
     ap.add_argument("--inject", action="store_true",
                     help="run decode through the tuned Pallas kernels")
     args = ap.parse_args(argv)
@@ -116,6 +162,10 @@ def main(argv=None):
         ap.error("--measured requires --autotune and no --tiles (it "
                  "changes the tuning oracle; --tiles loads a finished "
                  "plan)")
+    if (args.agent_ckpt or args.program_store) and not args.autotune:
+        ap.error("--agent-ckpt/--program-store warm-start the tuning "
+                 "pipeline: pass --autotune (they do not apply to --tiles, "
+                 "which loads a finished plan)")
     if args.measure_reps < 1:
         ap.error(f"--measure-reps must be >= 1, got {args.measure_reps}")
     if args.workers < 1:

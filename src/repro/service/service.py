@@ -11,6 +11,14 @@ own oracle view, all feeding the same worker pool and the same persistent
 across sessions coalesce inside the transport, so two sessions tuning
 overlapping corpora never measure the same pair twice.
 
+Sessions warm-start from persistent artifacts (PR 5):
+``open_session(agent_ckpt=...)`` restores a fitted agent from a
+``repro.artifacts`` checkpoint instead of re-paying ``fit``, and a
+service-wide ``program_store=`` lets every session answer
+previously-tuned site sets by lookup — zero agent inferences, shared
+across sessions and across processes (the decision-level analogue of
+the shared timing DB).
+
 ::
 
     with TuningService(cfg, transport="pool", workers=4,
@@ -33,11 +41,12 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional, Sequence, Union
 
+from repro.artifacts import ProgramStore, load_agent, tune_through_store
 from repro.configs.neurovec import DEFAULT, NeuroVecConfig
-from repro.core.agents import make_agent
+from repro.core.agents import BruteForceAgent, make_agent
 from repro.core.env import CostModelEnv, MeasuredEnv
 from repro.core.protocols import Agent, AsyncOracle, Oracle
-from repro.core.vectorizer import TileProgram, tune
+from repro.core.vectorizer import TileProgram
 from repro.measure import TransportMeasureFn, make_transport
 
 _COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
@@ -57,17 +66,22 @@ class SessionHandle:
     transport's counter *deltas since the session opened*."""
 
     def __init__(self, service: "TuningService", name: str, agent: Agent,
-                 oracle: AsyncOracle):
+                 oracle: AsyncOracle,
+                 program_store: Optional[ProgramStore] = None):
         self.service = service
         self.name = name
         self.agent = agent
         self.oracle = oracle
+        self.program_store = program_store
         self._lock = threading.Lock()
         self._opened = time.perf_counter()
         self._fit_wall = 0.0
         self._tune_wall = 0.0
         self._tunes = 0
         self._sites_tuned = 0
+        self._agent_inferences = 0
+        self._store_hits = 0
+        self._store_misses = 0
         self._outstanding: "set[Future]" = set()
         self._closed = False
         t = oracle.transport
@@ -100,11 +114,19 @@ class SessionHandle:
 
     def _tune(self, sites: list) -> TileProgram:
         t0 = time.perf_counter()
-        prog = tune(sites, self.agent, self.oracle.space)
+        prog, hit = tune_through_store(sites, self.agent, self.oracle.space,
+                                       self.oracle, self.program_store)
         with self._lock:
             self._tune_wall += time.perf_counter() - t0
             self._tunes += 1
             self._sites_tuned += len(sites)
+            if self.program_store is not None and sites:
+                if hit:
+                    self._store_hits += 1
+                else:
+                    self._store_misses += 1
+            if not hit:
+                self._agent_inferences += len(sites)
         return prog
 
     def _forget(self, fut: Future) -> None:
@@ -126,6 +148,9 @@ class SessionHandle:
                     "fit_wall_s": self._fit_wall,
                     "tune_wall_s": self._tune_wall,
                     "tunes": self._tunes, "sites_tuned": self._sites_tuned,
+                    "agent_inferences": self._agent_inferences,
+                    "store_hits": self._store_hits,
+                    "store_misses": self._store_misses,
                     "in_flight_tunes": len(self._outstanding),
                     "transport": delta}
 
@@ -169,6 +194,12 @@ class TuningService:
     workers:    pool size when ``transport="pool"``.
     db_path:    persistent :class:`MeasureDB` path shared by every
                 session (repeat runs re-time nothing).
+    program_store: a :class:`~repro.artifacts.ProgramStore` (borrowed) or
+                a path (opened and owned by the service) shared by every
+                session that does not bring its own: finished tile
+                programs are served by lookup across sessions *and*
+                processes — the warm-start analogue of the shared
+                timing DB, one level up.
     max_parallel_tunes: thread-pool width for :meth:`SessionHandle.
                 tune_async` (measurement parallelism is the transport's).
     runner_kwargs: :class:`~repro.measure.runner.MeasureRunner` options
@@ -180,6 +211,7 @@ class TuningService:
                  transport: Union[str, object] = "inproc",
                  workers: Optional[int] = None,
                  db_path: Optional[str] = None, seed: int = 0,
+                 program_store: Union[str, ProgramStore, None] = None,
                  max_parallel_tunes: int = 4, **runner_kwargs):
         self.cfg = cfg
         self.seed = seed
@@ -194,22 +226,41 @@ class TuningService:
                                 "arguments")
             self.transport = transport
             self._owns_transport = False
+        self._owned_stores: "list[ProgramStore]" = []
+        self.program_store = self._resolve_store(program_store)
         self._executor = ThreadPoolExecutor(max_workers=max_parallel_tunes,
                                             thread_name_prefix="tune")
         self._sessions: "list[SessionHandle]" = []
         self._n_opened = 0
         self._closed = False
 
+    def _resolve_store(self, store: Union[str, ProgramStore, None]
+                       ) -> Optional[ProgramStore]:
+        """A path opens a service-owned store (closed with the service);
+        an instance is borrowed."""
+        if isinstance(store, str):
+            store = ProgramStore(store)
+            self._owned_stores.append(store)
+        return store
+
     # -- sessions ------------------------------------------------------------
     def open_session(self, cfg: Optional[NeuroVecConfig] = None,
                      agent: Union[str, Agent] = "ppo",
                      oracle: Union[str, Oracle] = "measured",
                      seed: Optional[int] = None,
+                     agent_ckpt: Optional[str] = None,
+                     program_store: Union[str, ProgramStore, None] = None,
                      **agent_kwargs) -> SessionHandle:
         """A new session: ``agent`` (registry name or :class:`Agent`)
         paired with ``oracle`` — ``"measured"`` (reward = the shared
         transport's timings), ``"model"`` (the analytic
-        :class:`CostModelEnv`), or a pre-built :class:`Oracle`."""
+        :class:`CostModelEnv`), or a pre-built :class:`Oracle`.
+
+        ``agent_ckpt`` warm-starts the session: the constructed agent's
+        state is restored from a ``repro.artifacts`` checkpoint
+        directory (fingerprint-verified), so the session can tune
+        without paying ``fit`` again.  ``program_store`` overrides the
+        service-wide store for this session (``None`` inherits it)."""
         if self._closed:
             raise RuntimeError("open_session on a closed TuningService")
         cfg = self.cfg if cfg is None else cfg
@@ -228,9 +279,15 @@ class TuningService:
             async_oracle = AsyncOracle(oracle)
         a = (make_agent(agent, cfg, seed=seed, **agent_kwargs)
              if isinstance(agent, str) else agent)
+        if agent_ckpt is not None:
+            load_agent(agent_ckpt, agent=a)
+            if isinstance(a, BruteForceAgent):    # brute: re-bind live oracle
+                a.oracle = async_oracle.oracle
+        store = (self.program_store if program_store is None
+                 else self._resolve_store(program_store))
         self._n_opened += 1
         handle = SessionHandle(self, f"session-{self._n_opened}", a,
-                               async_oracle)
+                               async_oracle, program_store=store)
         self._sessions.append(handle)
         return handle
 
@@ -246,7 +303,8 @@ class TuningService:
 
     def close(self) -> None:
         """Close every session, stop the tune pool, and — when the
-        service built it — close the transport.  Idempotent."""
+        service built them — close the transport and any program stores
+        it opened from paths.  Idempotent."""
         if self._closed:
             return
         for s in self._sessions:
@@ -255,6 +313,8 @@ class TuningService:
         self._executor.shutdown(wait=True)
         if self._owns_transport:
             self.transport.close()
+        for store in self._owned_stores:
+            store.close()
 
     def __enter__(self) -> "TuningService":
         return self

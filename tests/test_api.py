@@ -31,7 +31,7 @@ def _fitted(name):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("name", AGENT_NAMES)
-def test_agent_contract(name):
+def test_agent_contract(name, tmp_path):
     agent = _fitted(name)
     assert isinstance(agent, Agent)
     assert agent.name == name
@@ -57,6 +57,18 @@ def test_agent_contract(name):
     # sampling path keeps the same output contract
     a3 = np.asarray(agent.act(HELDOUT, sample=True))
     assert a3.shape == (len(HELDOUT), 3)
+    # save -> load -> act round-trip (PR 5): the loaded agent's
+    # deployment actions are bitwise-equal to the original's
+    from repro.artifacts import agent_fingerprint, load_agent, save_agent
+    art = str(tmp_path / "agent")
+    fp = save_agent(agent, art)
+    loaded = load_agent(art, cfg=NV, seed=0)
+    if name == "brute":                 # captured-oracle rebind (load docs)
+        loaded.oracle = ENV
+    a4 = np.asarray(loaded.act(HELDOUT, sample=False))
+    np.testing.assert_array_equal(a1, a4)
+    # the fingerprint is a stable function of the deployable state
+    assert agent_fingerprint(loaded) == fp == agent_fingerprint(agent)
 
 
 def test_make_agent_registry_smoke():

@@ -1,0 +1,375 @@
+"""The ``repro.artifacts`` persistence layer (PR 5): agent checkpoints
+(atomic, fingerprinted, corruption-rejecting), the ``ProgramStore``
+warm-start cache, and the facade/service wiring on top.
+
+THE acceptance invariant lives here: ``load(save(nv)).tune_sites(S)`` is
+bitwise-identical to ``nv.tune_sites(S)``, and a second tune of the same
+site set through a ``ProgramStore`` performs zero agent inferences and
+zero oracle evaluations."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (CostModelEnv, NeuroVecConfig, NeuroVectorizer,
+                       TileProgram, make_agent)
+from repro.artifacts import (ArtifactError, ProgramStore, agent_fingerprint,
+                             load_agent, program_key, read_agent_state,
+                             save_agent, tune_through_store)
+from repro.core import dataset
+from repro.service import TuningService
+
+NV = NeuroVecConfig(train_batch=64, sgd_minibatch=32, ppo_epochs=2)
+ENV = CostModelEnv(NV)
+SITES = dataset.generate(8, seed=21)
+OTHER = dataset.generate(5, seed=22)
+
+
+class CountingOracle:
+    """CostModelEnv wrapper counting every oracle evaluation — proves the
+    store's hit path never consults the reward source."""
+
+    def __init__(self, cfg):
+        self._env = CostModelEnv(cfg)
+        self.calls = 0
+
+    def __getattr__(self, name):
+        attr = getattr(self._env, name)
+        if name in ("baseline_costs", "costs_batch", "rewards_batch",
+                    "speedups_batch", "cost_grid", "tiles_costs"):
+            def counted(*a, **k):
+                self.calls += 1
+                return attr(*a, **k)
+            return counted
+        return attr
+
+
+class CountingAgent:
+    """Protocol agent whose act() counts inferences."""
+
+    name = "polly"          # reuse a registry name: key stability not at issue
+
+    def __init__(self, cfg):
+        self._inner = make_agent("polly", cfg)
+        self.act_calls = 0
+
+    def fit(self, sites, oracle, **kw):
+        self._inner.fit(sites, oracle, **kw)
+        return self
+
+    def act(self, sites, *, sample=False):
+        self.act_calls += 1
+        return self._inner.act(sites, sample=sample)
+
+    def state_dict(self):
+        return self._inner.state_dict()
+
+    def load_state(self, state):
+        self._inner.load_state(state)
+        return self
+
+
+# ---------------------------------------------------------------------------
+# agent checkpoint format
+# ---------------------------------------------------------------------------
+
+def test_agent_artifact_fingerprint_mismatch_rejected(tmp_path):
+    agent = make_agent("ppo", NV, seed=0).fit(SITES, ENV, total_steps=64)
+    art = str(tmp_path / "a")
+    save_agent(agent, art)
+    # tamper with the array payload: the manifest fingerprint no longer
+    # matches and the load must refuse
+    npz = os.path.join(art, "state.npz")
+    data = bytearray(open(npz, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    with open(npz, "wb") as f:
+        f.write(bytes(data))
+    # the flipped byte lands either in a compressed block (zip/zlib layer
+    # rejects) or in plain array bytes (the fingerprint check rejects) —
+    # both are refusals, never a silently-wrong policy
+    import zipfile
+    import zlib
+    with pytest.raises((ArtifactError, zipfile.BadZipFile, zlib.error,
+                        OSError, ValueError)):
+        load_agent(art, cfg=NV, seed=0)
+
+
+def test_agent_artifact_tampered_json_rejected(tmp_path):
+    agent = make_agent("random", NV, seed=3).fit([], ENV)
+    art = str(tmp_path / "a")
+    save_agent(agent, art)
+    sj = os.path.join(art, "state.json")
+    state = json.load(open(sj))
+    state["seed"] = 999                      # silent behaviour change
+    with open(sj, "w") as f:
+        json.dump(state, f)
+    with pytest.raises(ArtifactError, match="fingerprint mismatch"):
+        load_agent(art, cfg=NV, seed=3)
+
+
+def test_agent_artifact_missing_manifest_not_restorable(tmp_path):
+    agent = make_agent("baseline", NV).fit(SITES, ENV)
+    art = str(tmp_path / "a")
+    save_agent(agent, art)
+    os.remove(os.path.join(art, "manifest.json"))   # "interrupted save"
+    with pytest.raises(ArtifactError, match="manifest.json missing"):
+        read_agent_state(art)
+    with pytest.raises(ArtifactError, match="no restorable"):
+        load_agent(str(tmp_path / "never-written"))
+
+
+def test_agent_state_name_version_validation():
+    ppo = make_agent("ppo", NV, seed=0)
+    state = make_agent("random", NV, seed=0).state_dict()
+    with pytest.raises(ValueError, match="cannot load into"):
+        ppo.load_state(state)
+    bad = ppo.state_dict()
+    bad["version"] = 999
+    with pytest.raises(ValueError, match="version"):
+        ppo.load_state(bad)
+
+
+def test_ppo_state_mode_mismatch_rejected():
+    a = make_agent("ppo", NV, seed=0)
+    b = make_agent("ppo", NV, seed=0, mode="cont1")
+    with pytest.raises(ValueError, match="mode"):
+        b.load_state(a.state_dict())
+
+
+def test_fit_changes_agent_fingerprint():
+    a = make_agent("ppo", NV, seed=0)
+    fp0 = agent_fingerprint(a)
+    a.fit(SITES, ENV, total_steps=64)
+    assert agent_fingerprint(a) != fp0   # training invalidates store keys
+
+
+# ---------------------------------------------------------------------------
+# the ProgramStore
+# ---------------------------------------------------------------------------
+
+def test_program_store_roundtrip_and_last_wins(tmp_path):
+    p = str(tmp_path / "progs.jsonl")
+    store = ProgramStore(p)
+    prog = TileProgram({"a|1": (128, 256, 512), "b|2": (64, 1, 1)})
+    store.put("k1", prog)
+    store.put("k1", TileProgram({"a|1": (8, 128, 128)}))    # re-tune
+    store.close()
+
+    s2 = ProgramStore(p)
+    assert len(s2) == 1
+    got = s2.get("k1")
+    assert got.tiles == {"a|1": (8, 128, 128)}              # last wins
+    assert all(isinstance(v, tuple) for v in got.tiles.values())
+    assert s2.get("nope") is None
+    assert s2.stats()["hits"] == 1 and s2.stats()["misses"] == 1
+
+
+def test_program_store_corrupted_file_recovery(tmp_path):
+    p = str(tmp_path / "progs.jsonl")
+    good = {"k": "ok", "v": {"s|1": [16, 128, 128]}}
+    with open(p, "w") as f:
+        f.write(json.dumps(good) + "\n")
+        f.write("not json at all\n")
+        f.write('{"k": "torn", "v": {"s|1": [16,\n')        # torn write
+        f.write('{"no_key": 1}\n')
+        f.write('{"k": "badv", "v": "not-a-mapping"}\n')
+        f.write('{"k": "badtile", "v": {"s|1": ["x", 1, 2]}}\n')
+    store = ProgramStore(p)
+    assert store.skipped_lines == 5
+    assert store.get("ok").tiles == {"s|1": (16, 128, 128)}
+    store.put("fresh", TileProgram({"t|2": (8, 1, 1)}))     # still writable
+    store.close()
+    assert ProgramStore(p).get("fresh").tiles == {"t|2": (8, 1, 1)}
+
+
+def test_program_key_discriminates_all_three_coordinates():
+    a1 = make_agent("polly", NV).fit([], ENV)
+    k = program_key(SITES, a1, ENV)
+    # site set: order-insensitive, content-sensitive
+    assert program_key(list(reversed(SITES)), a1, ENV) == k
+    assert program_key(OTHER, a1, ENV) != k
+    # agent state: a differently-trained agent must not share entries
+    p0 = make_agent("ppo", NV, seed=0)
+    p1 = make_agent("ppo", NV, seed=0)
+    assert program_key(SITES, p0, ENV) == program_key(SITES, p1, ENV)
+    p1.fit(SITES, ENV, total_steps=64)
+    assert program_key(SITES, p0, ENV) != program_key(SITES, p1, ENV)
+    # oracle: a different config fingerprint must miss
+    other_env = CostModelEnv(NeuroVecConfig(illegal_slowdown=25.0))
+    assert program_key(SITES, a1, other_env) != k
+
+
+def test_store_hit_performs_zero_inferences_and_zero_oracle_evals(tmp_path):
+    store = ProgramStore(str(tmp_path / "p.jsonl"))
+    agent = CountingAgent(NV)
+    oracle = CountingOracle(NV)
+    agent.fit(SITES, oracle)
+
+    prog1, hit1 = tune_through_store(SITES, agent, ENV.space, oracle, store)
+    assert not hit1 and agent.act_calls == 1
+    oracle.calls = 0
+    prog2, hit2 = tune_through_store(SITES, agent, ENV.space, oracle, store)
+    assert hit2
+    assert agent.act_calls == 1          # zero agent inferences
+    assert oracle.calls == 0             # zero oracle evaluations
+    assert prog2.tiles == prog1.tiles
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# facade: save/load + program_store + close()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("ppo", "dtree", "nns", "brute", "random",
+                                  "polly", "baseline"))
+def test_facade_save_load_roundtrip_invariant(name, tmp_path):
+    nv = NeuroVectorizer(NV, agent=name, seed=0)
+    fit_kw = {"total_steps": 96} if name == "ppo" else {}
+    nv.fit(SITES, **fit_kw)
+    p1 = nv.tune_sites(SITES)
+
+    art = str(tmp_path / "facade")
+    nv.save(art)
+    nv2 = NeuroVectorizer.load(art)
+    assert nv2.cfg == NV
+    p2 = nv2.tune_sites(SITES)
+    assert p2.tiles == p1.tiles          # THE round-trip invariant
+
+
+def test_facade_load_shares_program_store_across_facades(tmp_path):
+    store_path = str(tmp_path / "progs.jsonl")
+    art = str(tmp_path / "facade")
+    nv = NeuroVectorizer(NV, agent="ppo", seed=0,
+                         program_store=store_path)
+    nv.fit(SITES, total_steps=96)
+    p1 = nv.tune_sites(SITES)
+    assert nv.store_misses == 1 and nv.agent_inferences == len(SITES)
+    nv.save(art)
+    nv.close()
+
+    # a "fresh process": load the artifact, reuse the store — pure lookup
+    nv2 = NeuroVectorizer.load(art, program_store=store_path)
+    p2 = nv2.tune_sites(SITES)
+    assert p2.tiles == p1.tiles
+    assert nv2.store_hits == 1 and nv2.agent_inferences == 0
+    # an unseen site set still tunes (and is appended)
+    p3 = nv2.tune_sites(OTHER)
+    assert nv2.store_misses == 1 and nv2.agent_inferences == len(OTHER)
+    assert len(p3.tiles) == len(OTHER)
+    nv2.close()
+
+
+def test_facade_closed_raises_clear_runtime_error(tmp_path):
+    nv = NeuroVectorizer(NV, agent="polly",
+                         program_store=str(tmp_path / "p.jsonl"))
+    nv.fit(SITES)
+    nv.close()
+    nv.close()                                       # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        nv.tune_sites(SITES)
+    with pytest.raises(RuntimeError, match="closed"):
+        nv.fit(SITES)
+
+
+def test_save_agent_resave_keeps_artifact_restorable(tmp_path):
+    # re-saving over an existing artifact is a whole-directory swap: the
+    # refreshed artifact must load (no torn old/new file mix)
+    art = str(tmp_path / "a")
+    agent = make_agent("ppo", NV, seed=0)
+    save_agent(agent, art)
+    agent.fit(SITES, ENV, total_steps=64)
+    fp2 = save_agent(agent, art)
+    loaded = load_agent(art, cfg=NV, seed=0)
+    assert agent_fingerprint(loaded) == fp2
+    assert not [d for d in os.listdir(tmp_path)
+                if ".tmp-" in d or ".old-" in d]    # staging cleaned up
+
+
+def test_facade_save_rejects_handbuilt_embedding_agent(tmp_path):
+    # a hand-passed embed_fn is a live callable: save must refuse loudly
+    # instead of letting load() silently rebuild with the default embedder
+    agent = make_agent("nns", NV, seed=0).fit(SITES, ENV)
+    nv = NeuroVectorizer(NV, agent=agent)
+    with pytest.raises(ArtifactError, match="embed_fn"):
+        nv.save(str(tmp_path / "f"))
+    # ...but the same fitted agent saved via the registry path round-trips,
+    # and load(agent=) restores into a caller-constructed instance
+    nv2 = NeuroVectorizer(NV, agent="nns", seed=0)
+    nv2.agent.load_state(agent.state_dict())
+    art = str(tmp_path / "g")
+    nv2.save(art)
+    fresh = make_agent("nns", NV, seed=0)
+    nv3 = NeuroVectorizer.load(art, agent=fresh)
+    assert nv3.agent is fresh
+    assert nv3.tune_sites(SITES).tiles == nv2.tune_sites(SITES).tiles
+
+
+def test_facade_load_model_override_skips_transport_requirement(tmp_path):
+    # a custom-transport recipe must not block loading under a model
+    # oracle override that never touches a transport
+    from repro.measure import InProcessTransport
+
+    class Spy:
+        backend_key = "spy-backend"
+
+        def __call__(self, sites, tiles):
+            return np.full(len(sites), 1e-3)
+
+    t = InProcessTransport(Spy())
+    nv = NeuroVectorizer(NV, agent="polly", oracle="measured", transport=t)
+    nv.fit(SITES)
+    art = str(tmp_path / "f")
+    nv.save(art)
+    with pytest.raises(ArtifactError, match="hand-built"):
+        NeuroVectorizer.load(art)                    # measured needs it
+    nv2 = NeuroVectorizer.load(art, oracle="model")  # model does not
+    assert len(nv2.tune_sites(SITES).tiles) == len(SITES)
+    t.close()
+
+
+def test_facade_save_rejects_custom_oracle_on_load(tmp_path):
+    nv = NeuroVectorizer(NV, agent="polly", oracle=CostModelEnv(NV))
+    nv.fit(SITES)
+    art = str(tmp_path / "facade")
+    nv.save(art)
+    with pytest.raises(ArtifactError, match="hand-built Oracle"):
+        NeuroVectorizer.load(art)
+    # an explicit override re-assembles fine
+    nv2 = NeuroVectorizer.load(art, oracle=CostModelEnv(NV))
+    assert nv2.tune_sites(SITES).tiles == nv.tune_sites(SITES).tiles
+
+
+# ---------------------------------------------------------------------------
+# service: warm sessions over one shared store
+# ---------------------------------------------------------------------------
+
+def test_service_sessions_share_store_and_warm_start_ckpt(tmp_path):
+    art = str(tmp_path / "agent")
+    fitted = make_agent("ppo", NV, seed=0).fit(SITES, ENV, total_steps=96)
+    save_agent(fitted, art)
+    expect = np.asarray(fitted.act(SITES, sample=False))
+
+    store_path = str(tmp_path / "progs.jsonl")
+    with TuningService(NV, transport="inproc",
+                       program_store=store_path) as svc:
+        s1 = svc.open_session(agent="ppo", oracle="model", agent_ckpt=art)
+        # the checkpointed policy acts identically without any fit
+        np.testing.assert_array_equal(
+            np.asarray(s1.agent.act(SITES, sample=False)), expect)
+        p1 = s1.tune(SITES)
+        assert s1.stats()["store_misses"] == 1
+        # a SECOND warm session from the same ckpt: same fingerprint,
+        # same store -> lookup, zero inferences
+        s2 = svc.open_session(agent="ppo", oracle="model", agent_ckpt=art)
+        p2 = s2.tune(SITES)
+        st = s2.stats()
+        assert st["store_hits"] == 1 and st["agent_inferences"] == 0
+        assert p2.tiles == p1.tiles
+
+
+def test_open_session_rejects_bad_ckpt(tmp_path):
+    with TuningService(NV) as svc:
+        with pytest.raises(ArtifactError, match="no restorable"):
+            svc.open_session(agent="ppo", oracle="model",
+                             agent_ckpt=str(tmp_path / "nope"))

@@ -185,3 +185,23 @@ def test_serve_rejects_bad_measure_flags():
         serve.main(base + ["--transport", "pool", "--workers", "0"])
     with pytest.raises(SystemExit):
         serve.main(base + ["--transport", "teleport"])
+    # warm-start flags apply to the tuning pipeline, not loaded plans
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "stablelm_3b", "--agent-ckpt", "/tmp/x"])
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "stablelm_3b", "--tiles", "t.json",
+                    "--program-store", "/tmp/x.jsonl"])
+
+
+def test_serve_warns_on_uncovered_sites(capsys):
+    from repro.launch import serve
+
+    prog = TileProgram({MM.key(): (16, 128, 128)})
+    missing = serve._warn_missing_tiles(prog, SITES)
+    assert missing == [ATTN.site]
+    err = capsys.readouterr().err
+    assert "WARNING" in err and ATTN.site in err and "1/2" in err
+    # full coverage: silent
+    full = TileProgram({s.key(): (16, 128, 128) for s in SITES})
+    assert serve._warn_missing_tiles(full, SITES) == []
+    assert capsys.readouterr().err == ""
