@@ -12,6 +12,10 @@ serving-scale story cares about:
   perfect absorption).
 * ``cache`` — the cross-transport persistence proof: a second, in-process
   pass over a pool-populated DB performs zero timings.
+* ``fault_recovery`` — chaos throughput: the same pair set against a cold
+  DB with one worker SIGKILLed mid-run vs. the healthy 2-worker rate.
+  The requeue path must deliver every timing (``failed_pairs == 0``);
+  ``recovery_ratio`` is the throughput retained under the fault.
 
 Interpret-mode timings on CPU are a throughput *proxy* (grid-size
 scaling, not MXU behaviour) — exactly enough to track the transport
@@ -25,7 +29,9 @@ from __future__ import annotations
 
 import json
 import os
+import signal
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -69,6 +75,44 @@ def _submit_all(transport, pairs, dup: int = 1):
     return [f.result() for f in futs]
 
 
+def _worker_pids() -> list:
+    """PIDs of this process's live ``repro.measure.worker`` children."""
+    me = os.getpid()
+    pids = []
+    for d in os.listdir("/proc"):
+        if not d.isdigit():
+            continue
+        try:
+            with open(f"/proc/{d}/cmdline", "rb") as f:
+                cmd = f.read().replace(b"\0", b" ")
+            with open(f"/proc/{d}/stat") as f:
+                ppid = int(f.read().split()[3])
+        except OSError:
+            continue
+        if ppid == me and b"repro.measure.worker" in cmd:
+            pids.append(int(d))
+    return pids
+
+
+def _kill_one_worker_mid_run(pool, after_pairs: int = 2) -> threading.Thread:
+    """SIGKILL one pool worker once ``after_pairs`` results have landed —
+    the run is then provably mid-flight, not before or after the batch."""
+    def _run():
+        while True:
+            st = pool.stats()
+            if st["timed_pairs"] + st["failed_pairs"] >= after_pairs:
+                break
+            if st["in_flight"] == 0 and st["timed_pairs"]:
+                return                  # batch already finished: no fault
+            time.sleep(0.02)
+        pids = _worker_pids()
+        if pids:
+            os.kill(pids[0], signal.SIGKILL)
+    th = threading.Thread(target=_run, daemon=True)
+    th.start()
+    return th
+
+
 def run() -> dict:
     pairs = _pairs()
     tmp = tempfile.mkdtemp(prefix="bench_service_")
@@ -110,6 +154,30 @@ def run() -> dict:
     inproc.close()
     assert st2["timed_pairs"] == 0, st2
 
+    # -- fault recovery: one worker SIGKILLed mid-run, cold DB --------------
+    healthy = throughput["workers_2"]["timings_per_s"]
+    pool = WorkerPoolTransport(workers=2,
+                               db=os.path.join(tmp, "measure_chaos.jsonl"),
+                               runner_kwargs=RUNNER_KW)
+    killer = _kill_one_worker_mid_run(pool)
+    t0 = time.perf_counter()
+    _submit_all(pool, pairs)
+    wall = time.perf_counter() - t0
+    killer.join(timeout=10)
+    st3 = pool.stats()
+    pool.close()
+    # the requeue path must deliver every timing despite the kill
+    assert st3["failed_pairs"] == 0, st3
+    assert st3["timed_pairs"] == len(pairs), st3
+    faulted = st3["timed_pairs"] / wall
+    fault_recovery = {
+        "healthy_timings_per_s": healthy,
+        "faulted_timings_per_s": faulted,
+        "recovery_ratio": faulted / healthy,
+        "worker_restarts": st3["worker_restarts"],
+        "retries": st3["retries"], "failed_pairs": st3["failed_pairs"],
+        "health_after": st3["health"]}
+
     results = {
         "config": {"fast": FAST, "n_pairs": len(pairs),
                    "runner": RUNNER_KW, "worker_counts": WORKER_COUNTS,
@@ -124,6 +192,7 @@ def run() -> dict:
         "coalesce": coalesce,
         "cache": {"second_pass_timed_pairs": st2["timed_pairs"],
                   "second_pass_hit_rate": st2["hit_rate"]},
+        "fault_recovery": fault_recovery,
     }
     with open(OUT, "w") as f:
         json.dump(results, f, indent=1)
@@ -133,6 +202,8 @@ def run() -> dict:
     print(f"bench_service,coalesce_rate,{coalesce['coalesce_rate']:.2f}")
     print(f"bench_service,second_pass_hit_rate,"
           f"{st2['hit_rate']:.2f}")
+    print(f"bench_service,fault_recovery_ratio,"
+          f"{fault_recovery['recovery_ratio']:.2f}")
     print(f"bench_service,out,{OUT}")
     return results
 

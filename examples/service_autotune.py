@@ -32,6 +32,10 @@ def main(argv=None):
                     help="PPO environment steps for the RL session")
     ap.add_argument("--reps", type=int, default=1,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--chaos", action="store_true",
+                    help="after the normal run, hard-kill the transport "
+                         "and prove tuning degrades to the cost model "
+                         "(prints the resulting health line)")
     args = ap.parse_args(argv)
 
     from measured_autotune import demo_sites, small_cfg
@@ -66,6 +70,23 @@ def main(argv=None):
                   f"{s['transport']['coalesced']} coalesced")
         for k in sorted(sweep_prog.tiles):
             print(f"  {k}: rl={rl_prog.tiles[k]} brute={sweep_prog.tiles[k]}")
+
+        if args.chaos:
+            # graceful degradation, end to end: the transport dies hard,
+            # yet the session still tunes — the MeasuredEnv circuit
+            # breaker opens and prices with the analytic cost model
+            print("== chaos: closing the measurement transport mid-life ==")
+            svc.transport.close()
+            env = rl.oracle.oracle          # the session's MeasuredEnv
+            env.clear_result_cache()        # force re-pricing on the ruin
+            chaos_prog = rl.tune(sites)
+            assert len(chaos_prog.tiles) == len(sites)
+            from repro.api import program_speedup
+            sp = program_speedup(chaos_prog, sites, env=env)
+            print(f"[chaos] health: {rl.health()} — tuned "
+                  f"{len(chaos_prog.tiles)} sites via cost-model fallback "
+                  f"(modelled speedup {sp:.2f}x, breaker_open="
+                  f"{env.breaker_open})")
 
         st = svc.transport.stats()
     print(f"measurements: {st['timed_pairs']} timed, {st['hits']} DB hits, "

@@ -50,10 +50,11 @@ Import tiers — ``__all__`` below documents the *supported* surface:
   layer (``save_agent``/``load_agent``/:class:`ProgramStore`) and the
   service tier (:class:`TuningService`).
 * **legacy deep-import tier**: concrete agent classes and per-method
-  helpers (``PPOAgent``, ``brute_force_labels``, ``polly_action``, ...)
-  remain importable from here for existing callers, but new code should
-  reach them through the registries; they are deliberately *not* in
-  ``__all__`` any more.
+  helpers (``PPOAgent``, ``brute_force_labels``, ...) remain importable
+  from here for existing callers, but new code should reach them through
+  the registries; they are deliberately *not* in ``__all__`` any more.
+  (The deprecated ``polly_action`` shim completed its removal cycle in
+  PR 6 — use ``make_agent("polly", cfg)``.)
 """
 from __future__ import annotations
 
@@ -73,12 +74,12 @@ from repro.core.agents import (AGENT_NAMES, BaselineHeuristicAgent,
                                PPOAgent, PollyAgent, RandomAgent,
                                brute_force_action, brute_force_costs,
                                brute_force_labels, default_embed_fn,
-                               make_agent, n_evaluations, polly_action)
+                               make_agent, n_evaluations)
 from repro.core.env import (ActionSpace, CostModelEnv, MeasuredEnv,
                             set_strict_actions)
 from repro.core.extractor import extract_arch_sites, extract_sites
 from repro.core.protocols import (Agent, AsyncOracle, MeasureTransport,
-                                  Oracle)
+                                  Oracle, resolve_health)
 from repro.core.vectorizer import (TileProgram, baseline_program, inject,
                                    program_speedup, tune, tune_step_fn)
 from repro.measure import (TRANSPORT_NAMES, CachedMeasureFn,
@@ -102,7 +103,7 @@ __all__ = [
     "ArtifactError", "save_agent", "load_agent", "agent_fingerprint",
     "ProgramStore", "program_key",
     # NOTE: the legacy deep-import tier (concrete agent classes
-    # PPOAgent/BruteForceAgent/..., brute_force_* helpers, polly_action,
+    # PPOAgent/BruteForceAgent/..., brute_force_* helpers,
     # MeasureRunner/MeasureDB/CachedMeasureFn/InProcessTransport/
     # WorkerPoolTransport/TransportMeasureFn, tune/tune_step_fn) stays
     # importable from this module for existing callers but is no longer
@@ -276,6 +277,16 @@ class NeuroVectorizer:
         """Aggregate speedup of ``program`` over the heuristic baseline,
         priced by this facade's oracle semantics."""
         return program_speedup(program, list(sites), env=self.oracle)
+
+    def health(self) -> str:
+        """``ok | degraded | down`` of this facade's reward path.
+
+        ``degraded`` means tuning still completes but rewards come from
+        the analytic cost model (the :class:`MeasuredEnv` circuit
+        breaker opened, or the transport collapsed under an oracle that
+        can fall back); the model-oracle facade is always ``ok``."""
+        fn = getattr(self.oracle, "measure_fn", None)
+        return resolve_health(self.oracle, getattr(fn, "transport", None))
 
     # -- persistence (PR 5) -------------------------------------------------
     def save(self, path: str) -> str:

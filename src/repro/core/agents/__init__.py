@@ -20,7 +20,7 @@ from repro.core.agents.brute import (BruteForceAgent, brute_force_action,
                                      n_evaluations)
 from repro.core.agents.dtree import DecisionTreeAgent
 from repro.core.agents.nns import NNSAgent
-from repro.core.agents.polly import PollyAgent, polly_action
+from repro.core.agents.polly import PollyAgent
 from repro.core.agents.ppo import PPOAgent
 from repro.core.agents.random_search import RandomAgent
 from repro.core.env import ActionSpace
@@ -82,4 +82,4 @@ __all__ = ["AGENT_NAMES", "make_agent", "default_embed_fn",
            "PPOAgent", "BruteForceAgent", "DecisionTreeAgent", "NNSAgent",
            "PollyAgent", "RandomAgent", "BaselineHeuristicAgent",
            "brute_force_action", "brute_force_labels", "brute_force_costs",
-           "n_evaluations", "polly_action"]
+           "n_evaluations"]

@@ -124,18 +124,6 @@ class PollyAgent:
         return out
 
 
-def polly_action(space, site: KernelSite):
-    """Deprecated per-site shim — prefer ``make_agent("polly", cfg)``
-    (vectorized, protocol-conformant).  Emits ``DeprecationWarning``;
-    scheduled for removal in PR 6 (see ROADMAP.md deprecations)."""
-    import warnings
-    warnings.warn("polly_action(space, site) is deprecated; use "
-                  "make_agent('polly', cfg).act(sites) instead "
-                  "(removal scheduled for PR 6)",
-                  DeprecationWarning, stacklevel=2)
-    return PollyAgent(space).act([site])[0]
-
-
 def _polly_action_ref(space, site: KernelSite):
     """The original interpreted factor-product walk (parity reference)."""
     sizes = space.valid_sizes(site.kind)

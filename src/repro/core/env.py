@@ -266,12 +266,34 @@ class MeasuredEnv(CostModelEnv):
     cannot be timed.  With ``measure_fn=None`` (off-TPU) every query falls
     back to the analytic model, making this a drop-in
     :class:`CostModelEnv`.
+
+    **Circuit breaker** (graceful degradation): when the measurement path
+    collapses — the hook raises (dead transport), or
+    ``breaker_threshold`` consecutive batches come back with *every* pair
+    failed — the breaker opens and the oracle degrades to the analytic
+    cost model instead of feeding all-``inf`` costs (= all-penalty
+    rewards, a corrupted training signal) into tuning.  ``health()``
+    reports ``"degraded"`` while open; cached failure verdicts from the
+    collapse are purged so degraded queries re-price with the model.
+    The breaker is one-way by design: call :meth:`reset_breaker` once
+    the backend recovers.
     """
 
+    #: a down transport degrades this oracle (resolve_health) rather
+    #: than taking tuning down with it
+    can_degrade = True
+
     def __init__(self, nv_cfg: NeuroVecConfig, measure_fn=None,
-                 seed: int = 0):
+                 seed: int = 0, breaker_threshold: int = 2):
         super().__init__(nv_cfg, seed=seed, vectorized=True)
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}")
         self.measure_fn = measure_fn
+        self.breaker_threshold = breaker_threshold
+        self.breaker_open = False
+        self.degraded_reason: Optional[str] = None
+        self._consec_failed_batches = 0
         self._result_cache: Dict[Tuple[str, Tuple[int, int, int]],
                                  float] = {}
         self.measure_calls = 0          # hook invocations (for tests/ops)
@@ -279,6 +301,27 @@ class MeasuredEnv(CostModelEnv):
 
     def clear_result_cache(self) -> None:
         self._result_cache.clear()
+
+    def health(self) -> str:
+        """``"degraded"`` once the breaker opened (analytic fallback in
+        effect), ``"ok"`` otherwise."""
+        return "degraded" if self.breaker_open else "ok"
+
+    def _trip_breaker(self, reason: str) -> None:
+        self.breaker_open = True
+        self.degraded_reason = reason
+        # failure verdicts cached during the collapse are artifacts of
+        # the dead measurement path, not of the kernels: purge them so
+        # degraded-mode queries re-price with the analytic model
+        for k in [k for k, v in self._result_cache.items()
+                  if not math.isfinite(v)]:
+            del self._result_cache[k]
+
+    def reset_breaker(self) -> None:
+        """Re-arm measurement after the backend recovers."""
+        self.breaker_open = False
+        self.degraded_reason = None
+        self._consec_failed_batches = 0
 
     # -- the measured cost of explicit tiles --------------------------------
     def _measured_costs(self, sites, tiles) -> np.ndarray:
@@ -298,21 +341,57 @@ class MeasuredEnv(CostModelEnv):
             m_sites = [sites[i] for i in miss]
             m_tiles = tiles[miss]
             vals = costmodel_vec.costs_for_tiles(m_sites, m_tiles)
-            if self.measure_fn is not None:
+            if self.measure_fn is not None and not self.breaker_open:
                 legal = np.flatnonzero(np.isfinite(vals))
                 if len(legal):
-                    t = np.asarray(self.measure_fn(
-                        [m_sites[j] for j in legal], m_tiles[legal]),
-                        np.float64).reshape(-1)
-                    if t.shape != (len(legal),):
-                        raise ValueError(
-                            f"measure_fn returned shape {t.shape}, "
-                            f"expected ({len(legal)},)")
-                    vals[legal] = np.where(np.isfinite(t) & (t > 0),
-                                           t, np.inf)
-                    self.measure_calls += 1
-                    self.measured_pairs += len(legal)
+                    try:
+                        raw = self.measure_fn(
+                            [m_sites[j] for j in legal], m_tiles[legal])
+                    except Exception as e:
+                        # a raising hook is a collapsed measurement path
+                        # (closed/dead transport): open the breaker and
+                        # keep the analytic prices for this batch
+                        self._trip_breaker(
+                            f"measure_fn raised {type(e).__name__}: {e}")
+                        raw = None
+                    if raw is not None:
+                        t = np.asarray(raw, np.float64).reshape(-1)
+                        if t.shape != (len(legal),):
+                            raise ValueError(
+                                f"measure_fn returned shape {t.shape}, "
+                                f"expected ({len(legal)},)")
+                        measured = np.where(np.isfinite(t) & (t > 0),
+                                            t, np.inf)
+                        self.measure_calls += 1
+                        self.measured_pairs += len(legal)
+                        if np.isfinite(measured).any():
+                            self._consec_failed_batches = 0
+                            vals[legal] = measured
+                        else:
+                            # every pair failed: one flaky batch is
+                            # honest data (fail-closed inf), a streak is
+                            # a dead backend — degrade instead of
+                            # poisoning rewards with all-penalty
+                            self._consec_failed_batches += 1
+                            if self._consec_failed_batches \
+                                    >= self.breaker_threshold:
+                                self._trip_breaker(
+                                    f"{self._consec_failed_batches} "
+                                    f"consecutive all-failed "
+                                    f"measurement batches")
+                            else:
+                                vals[legal] = measured
             for i, v in zip(miss, vals):
+                self._result_cache[keys[i]] = float(v)
+        gone = [i for i, k in enumerate(keys)
+                if k not in self._result_cache]
+        if gone:
+            # a mid-batch breaker trip purged these keys' cached failure
+            # verdicts (they were cached before this batch, so they are
+            # not in ``miss``): re-price them with the analytic model
+            fresh = costmodel_vec.costs_for_tiles(
+                [sites[i] for i in gone], tiles[gone])
+            for i, v in zip(gone, fresh):
                 self._result_cache[keys[i]] = float(v)
         return np.array([self._result_cache[k] for k in keys], np.float64)
 

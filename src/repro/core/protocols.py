@@ -205,11 +205,42 @@ class MeasureTransport(Protocol):
         ``in_flight``."""
         ...
 
+    def health(self) -> str:
+        """``"ok"`` — full capacity; ``"degraded"`` — still measuring
+        but impaired (workers lost, respawn backoff in progress);
+        ``"down"`` — closed or unable to make progress.  The signal the
+        oracle-level circuit breaker consumes."""
+        ...
+
     def __enter__(self) -> "MeasureTransport":
         ...
 
     def __exit__(self, *exc) -> None:
         ...
+
+
+def resolve_health(oracle, transport=None) -> str:
+    """Combine oracle-level and transport-level health into one
+    ``ok | degraded | down`` verdict.
+
+    The oracle's own state wins (a tripped circuit breaker on
+    :class:`~repro.core.env.MeasuredEnv` reports ``degraded`` no matter
+    what the transport says — it already switched to the analytic
+    model).  A ``down`` transport under an oracle that *can* degrade
+    (``can_degrade``) is reported ``degraded``, not ``down``: tuning
+    still completes via the cost model.  Objects without a ``health``
+    member are treated as ``ok`` (the analytic oracle never fails)."""
+    h = getattr(oracle, "health", None)
+    env_h = h() if callable(h) else "ok"
+    if env_h != "ok":
+        return env_h
+    if transport is None:
+        return "ok"
+    h = getattr(transport, "health", None)
+    t_h = h() if callable(h) else "ok"
+    if t_h == "down" and getattr(oracle, "can_degrade", False):
+        return "degraded"
+    return t_h
 
 
 class AsyncOracle:
@@ -273,6 +304,11 @@ class AsyncOracle:
     def close(self) -> None:
         if self.transport is not None:
             self.transport.close()
+
+    def health(self) -> str:
+        """``ok | degraded | down`` for this oracle+transport pair
+        (see :func:`resolve_health`)."""
+        return resolve_health(self.oracle, self.transport)
 
     def __enter__(self) -> "AsyncOracle":
         return self

@@ -55,16 +55,24 @@ class StepMonitor:
 
 
 class PreemptionHandler:
-    """Installs SIGTERM/SIGINT handlers; trainer polls ``should_stop``."""
+    """Installs SIGTERM/SIGINT handlers; trainer polls ``should_stop``.
 
-    def __init__(self, signals=(signal.SIGTERM,)):
+    ``on_stop`` is the push-side alternative for consumers with no poll
+    loop (e.g. :class:`~repro.service.TuningService`): invoked once from
+    the handler after ``should_stop`` is set — drain and close there."""
+
+    def __init__(self, signals=(signal.SIGTERM,), on_stop=None):
         self.should_stop = False
+        self._on_stop = on_stop
         self._prev = {}
         for s in signals:
             self._prev[s] = signal.signal(s, self._handle)
 
     def _handle(self, signum, frame):
+        already = self.should_stop
         self.should_stop = True
+        if self._on_stop is not None and not already:
+            self._on_stop()
 
     def restore(self):
         for s, h in self._prev.items():

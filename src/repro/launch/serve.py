@@ -112,6 +112,7 @@ def _tile_plan(args, model, params, batch, cache):
         print(f"[serve] measurements: {st['timed_pairs']} timed, "
               f"{st['hits']} DB hits, {st['coalesced']} coalesced "
               f"({t.backend_key})")
+        print(f"[serve] health: {nv.health()}")
     if nv is not None:
         nv.close()                      # release pool workers / DB handles
     return prog

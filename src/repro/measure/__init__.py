@@ -25,13 +25,21 @@ stand-in.  Layered bottom-up:
 :func:`make_measured_env` assembles a stack into a ready
 :class:`~repro.core.env.MeasuredEnv` — what
 ``NeuroVectorizer(cfg, oracle="measured", transport=...)`` constructs.
+
+Reliability (PR 6): :mod:`repro.measure.faults` supplies deterministic
+chaos machinery (:class:`FaultInjectionTransport`, :class:`ChaosRunner`,
+:class:`FaultSchedule`) used to prove the transport contract under
+crashes/hangs/torn frames; :func:`respawn_backoff` is the pool's
+crash-loop backoff schedule.
 """
 from __future__ import annotations
 
 from typing import Optional, Union
 
 from repro.measure.db import MeasureDB, make_key
-from repro.measure.pool import WorkerPoolTransport
+from repro.measure.faults import (ChaosRunner, FaultInjectionTransport,
+                                  FaultSchedule)
+from repro.measure.pool import WorkerPoolTransport, respawn_backoff
 from repro.measure.runner import (MeasureRunner, default_interpret,
                                   device_kind)
 from repro.measure.transport import (CachedMeasureFn, InProcessTransport,
@@ -43,7 +51,9 @@ TRANSPORT_NAMES = ("inproc", "pool")
 __all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
            "InProcessTransport", "WorkerPoolTransport", "TransportMeasureFn",
            "TRANSPORT_NAMES", "make_transport", "make_measured_env",
-           "default_interpret", "device_kind", "timing"]
+           "default_interpret", "device_kind", "timing",
+           "FaultInjectionTransport", "ChaosRunner", "FaultSchedule",
+           "respawn_backoff"]
 
 
 def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,

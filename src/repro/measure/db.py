@@ -13,8 +13,19 @@ zero kernel timings (proven by ``benchmarks/bench_measure.py``).
 
 Robustness: lines that fail to parse (truncated writes, manual edits) are
 skipped and counted, never fatal — the DB degrades to re-measuring.
-Failed measurements are stored as ``null`` (strict JSON) and round-trip
-back to ``inf``, so known-bad tiles are not re-timed either.
+A torn *trailing* line (crash mid-append leaves no newline) is isolated
+on the next open: the first append starts on a fresh line, so one torn
+record never corrupts the record written after it.  Failed measurements
+are stored as ``null`` (strict JSON) and round-trip back to ``inf``, so
+known-bad tiles are not re-timed either.
+
+Quarantine records (PR 6) are the poison-job ledger: a ``(site, tiles)``
+pair that repeatedly kills or wedges measurement workers is recorded via
+:meth:`MeasureDB.quarantine` with its attempt count and a reason.  A
+quarantined key reads back as ``inf`` (fail-closed, exactly like a
+kernel that cannot build) in *every* process that opens the DB, so no
+future run ever re-attempts it; :meth:`MeasureDB.quarantined` exposes
+the forensic record.
 
 Execution moved behind the transport layer in PR 4:
 :class:`~repro.measure.transport.CachedMeasureFn` (still importable from
@@ -50,7 +61,9 @@ class MeasureDB:
         self.path = path
         self.max_entries = max_entries
         self._mem: "OrderedDict[str, float]" = OrderedDict()
+        self._quarantined: dict = {}    # key -> {"attempts", "reason"}
         self.skipped_lines = 0          # corrupt/garbage lines ignored
+        self._torn_tail = False         # file ends mid-record (no newline)
         self._fh = None
         self._load()
 
@@ -70,7 +83,20 @@ class MeasureDB:
                 except (ValueError, KeyError, TypeError):
                     self.skipped_lines += 1
                     continue
+                if rec.get("kind") == "quarantine":
+                    self._quarantined[key] = {
+                        "attempts": int(rec.get("attempts", 0)),
+                        "reason": str(rec.get("reason", ""))}
                 self._remember(key, val)
+        # a crash mid-append leaves the final line unterminated; the line
+        # itself was skipped above — remember to start the next append on
+        # a fresh line so the torn bytes cannot corrupt a later record
+        try:
+            with open(self.path, "rb") as fb:
+                fb.seek(-1, os.SEEK_END)
+                self._torn_tail = fb.read(1) != b"\n"
+        except OSError:                 # empty file: nothing to isolate
+            self._torn_tail = False
 
     def _remember(self, key: str, val: float) -> None:
         self._mem[key] = val
@@ -79,12 +105,14 @@ class MeasureDB:
             while len(self._mem) > self.max_entries:
                 self._mem.popitem(last=False)
 
-    def _append(self, key: str, val: float) -> None:
+    def _append(self, rec: dict) -> None:
         if self._fh is None:
             os.makedirs(os.path.dirname(os.path.abspath(self.path)),
                         exist_ok=True)
             self._fh = open(self.path, "a")
-        rec = {"k": key, "v": None if not np.isfinite(val) else val}
+            if self._torn_tail:
+                self._fh.write("\n")    # isolate the torn trailing record
+                self._torn_tail = False
         self._fh.write(json.dumps(rec) + "\n")
         self._fh.flush()
 
@@ -98,11 +126,34 @@ class MeasureDB:
         v = self._mem.get(key)
         if v is not None:
             self._mem.move_to_end(key)
+        elif key in self._quarantined:
+            return float("inf")         # quarantine survives LRU eviction
         return v
 
     def put(self, key: str, val: float) -> None:
-        self._append(key, val)
+        self._append({"k": key, "v": None if not np.isfinite(val) else val})
         self._remember(key, val)
+
+    # -- poison-job quarantine ----------------------------------------------
+    def quarantine(self, key: str, attempts: int, reason: str) -> None:
+        """Persist ``key`` as poisoned: it reads back ``inf`` (fail-closed)
+        in every process that opens this DB, with the attempt count and
+        reason kept for forensics.  Older readers see a plain failed
+        measurement (``v: null`` → ``inf``) — the record stays
+        backward-compatible."""
+        info = {"attempts": int(attempts), "reason": str(reason)}
+        self._append({"k": key, "v": None, "kind": "quarantine", **info})
+        self._quarantined[key] = info
+        self._remember(key, float("inf"))
+
+    def quarantined(self, key: str) -> Optional[dict]:
+        """The quarantine record for ``key`` — ``{"attempts", "reason"}``
+        — or ``None`` if the key is not poisoned."""
+        return self._quarantined.get(key)
+
+    @property
+    def n_quarantined(self) -> int:
+        return len(self._quarantined)
 
     def __len__(self) -> int:
         return len(self._mem)

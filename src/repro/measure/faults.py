@@ -1,0 +1,212 @@
+"""Deterministic fault injection for the measurement stack.
+
+Chaos testing for :mod:`repro.measure`: the transport conformance suite
+(``tests/test_transport.py``) pins down *what* every transport must do —
+this module supplies the machinery to prove those invariants hold while
+workers crash, wedge, tear result frames mid-write, and timings jitter.
+Everything here is **seedable and deterministic**: a fault schedule is a
+pure function of ``(seed, event key)``, so a failing chaos run replays
+exactly.
+
+Three layers, composable:
+
+:class:`FaultSchedule`
+    The deterministic oracle — maps an event key (e.g. ``"site|tiles"``)
+    to a fault name or ``None`` via a crc32 hash.  No state, no RNG
+    objects to thread around.
+
+:class:`ChaosRunner`
+    A worker-*side* wrapper around any batched runner.  Injected faults
+    are the real thing: ``crash`` is ``os._exit`` mid-job, ``hang``
+    sleeps past the pool's ``job_timeout``, ``torn`` writes a partial /
+    garbage result frame onto the protocol pipe and dies, ``noise``
+    adds deterministic latency (never touching the value — measured
+    *values* must be bit-identical under chaos).  Destructive faults are
+    **one-shot** per event key (sentinel files in ``state_dir``) so the
+    retried job succeeds within the pool's ``max_attempts`` and the
+    conformance assertions on values and exactly-once DB writes stay
+    valid.
+
+:class:`FaultInjectionTransport`
+    A parent-side decorator over any
+    :class:`~repro.core.protocols.MeasureTransport`: delegates the whole
+    surface 1:1 (values, ordering, coalescing and counters pass through
+    untouched) while injecting deterministic latency noise around
+    ``submit``/``drain`` — the schedule shaking the *caller's* timing
+    assumptions rather than the worker's.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import time
+import zlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULTS = ("crash", "hang", "torn", "noise")
+
+
+class FaultSchedule:
+    """Deterministic fault oracle: ``draw(event_key)`` → fault name or
+    ``None``, a pure function of ``(seed, event_key)``.
+
+    With the default ``period=2`` roughly half of all event keys draw a
+    fault, uniformly spread over ``faults``; raising ``period`` thins
+    the schedule.
+    """
+
+    def __init__(self, seed: int = 0,
+                 faults: Tuple[str, ...] = FAULTS, period: int = 2):
+        if period < 1:
+            raise ValueError(f"period must be >= 1, got {period}")
+        self.seed = seed
+        self.faults = tuple(faults)
+        self.period = period
+
+    def draw(self, event_key: str) -> Optional[str]:
+        h = zlib.crc32(f"{self.seed}|{event_key}".encode())
+        slot = h % (len(self.faults) * self.period)
+        return self.faults[slot] if slot < len(self.faults) else None
+
+
+def _tear_frame(fd: int, variant: int) -> None:
+    """Write one of three torn result frames straight onto the protocol
+    pipe: a truncated length header, a length prefix promising more
+    payload than follows, or a full frame of invalid JSON — each hits a
+    distinct branch of the parent's framing error handling
+    (``EOFError`` ×2, ``ValueError``)."""
+    torn = (b"\x00\x00",                            # truncated header
+            struct.pack(">I", 64) + b"garbage",     # truncated payload
+            struct.pack(">I", 5) + b"notjs")        # invalid JSON
+    os.write(fd, torn[variant % len(torn)])
+
+
+class ChaosRunner:
+    """Worker-side chaos: wraps a batched runner and injects real faults
+    on the :class:`FaultSchedule`'s say-so.
+
+    ``state_dir`` holds the one-shot sentinel files (shared by every
+    worker process in the pool via the filesystem); ``hang_s`` should
+    comfortably exceed the pool's ``job_timeout`` so a hang is observed
+    as a wedge, not a slow success.
+    """
+
+    def __init__(self, base, schedule: FaultSchedule, state_dir: str,
+                 hang_s: float = 3600.0, noise_s: float = 0.05):
+        self.base = base
+        self.schedule = schedule
+        self.state_dir = state_dir
+        self.hang_s = hang_s
+        self.noise_s = noise_s
+
+    @property
+    def backend_key(self) -> str:
+        return getattr(self.base, "backend_key", "unknown")
+
+    def _fire_once(self, fault: str, event_key: str) -> bool:
+        """True exactly once per (fault, event_key) across every worker
+        process sharing ``state_dir``."""
+        name = f"{fault}-{zlib.crc32(event_key.encode()):08x}"
+        path = os.path.join(self.state_dir, name)
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        os.close(fd)
+        return True
+
+    def _inject(self, event_key: str) -> None:
+        fault = self.schedule.draw(event_key)
+        if fault is None:
+            return
+        if fault == "noise":
+            # latency only — the measured value must survive bit-identical
+            u = zlib.crc32(f"noise|{event_key}".encode()) % 1000 / 999.0
+            time.sleep(self.noise_s * u)
+            return
+        if not self._fire_once(fault, event_key):
+            return
+        if fault == "crash":
+            os._exit(3)
+        if fault == "hang":
+            time.sleep(self.hang_s)
+            os._exit(3)             # parent killed us long ago; belt+braces
+        if fault == "torn":
+            fd = os.environ.get("REPRO_WORKER_PROTO_FD")
+            if fd is not None:      # outside a worker: degrade to a crash
+                _tear_frame(int(fd), zlib.crc32(event_key.encode()))
+            os._exit(3)
+
+    def __call__(self, sites: Sequence, tiles) -> np.ndarray:
+        tiles = np.asarray(tiles, np.int64)
+        for s, t in zip(sites, tiles):
+            self._inject(f"{s.key()}|{tuple(int(x) for x in t)}")
+        return self.base(sites, tiles)
+
+
+class FaultInjectionTransport:
+    """Parent-side chaos decorator over any MeasureTransport.
+
+    Correctness-invisible by construction: every call delegates to the
+    wrapped transport, so values, future identity (coalescing), counter
+    arithmetic and DB writes are untouched — only *timing* changes, via
+    deterministic latency noise before ``submit`` and ``drain``.  Pair
+    it with a :class:`ChaosRunner` factory in the workers to shake both
+    ends of the pipe at once.
+    """
+
+    def __init__(self, inner, seed: int = 0, noise_s: float = 0.02):
+        self.inner = inner
+        self.schedule = FaultSchedule(seed, faults=("noise",), period=2)
+        self.noise_s = noise_s
+        self.faults_injected = 0
+        self._calls = 0
+
+    @property
+    def backend_key(self) -> str:
+        return self.inner.backend_key
+
+    @property
+    def db(self):
+        return getattr(self.inner, "db", None)
+
+    def _maybe_noise(self, what: str) -> None:
+        self._calls += 1
+        if self.schedule.draw(f"{what}|{self._calls}") is None:
+            return
+        u = zlib.crc32(f"{what}|{self._calls}|u".encode()) % 1000 / 999.0
+        self.faults_injected += 1
+        time.sleep(self.noise_s * u)
+
+    def submit(self, sites: Sequence, tiles) -> list:
+        self._maybe_noise("submit")
+        return self.inner.submit(sites, tiles)
+
+    def drain(self) -> None:
+        self._maybe_noise("drain")
+        self.inner.drain()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def health(self) -> str:
+        h = getattr(self.inner, "health", None)
+        return h() if callable(h) else "ok"
+
+    def stats(self) -> dict:
+        s = self.inner.stats()
+        s["faults_injected"] = self.faults_injected
+        return s
+
+    def __enter__(self) -> "FaultInjectionTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __getattr__(self, name):
+        # transparent decorator: surface anything transport-specific the
+        # tests poke at (worker_restarts, runner, ...)
+        return getattr(self.inner, name)

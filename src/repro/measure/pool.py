@@ -18,7 +18,16 @@ contract, conformance-tested next to the in-process transport):
   DB path performs zero timings no matter which transport produced it.
 * a job whose worker dies mid-measurement is requeued (the worker is
   respawned); after ``max_attempts`` total tries it fails closed to
-  ``inf`` — the same marker as a kernel that fails to build.
+  ``inf`` — the same marker as a kernel that fails to build — and is
+  *quarantined* in the DB (:meth:`~repro.measure.db.MeasureDB.
+  quarantine`: attempt count + reason), so no future run in any process
+  re-attempts a pair that kills workers.
+* worker respawns back off exponentially with deterministic jitter
+  (:func:`respawn_backoff`) — a crash-looping backend stops eating the
+  spawn cost instead of hammering it; ``health()`` reports ``ok`` /
+  ``degraded`` (workers lost or backing off) / ``down`` (no dispatcher
+  can make progress), the signal the oracle-level circuit breaker
+  (:class:`~repro.core.env.MeasuredEnv`) degrades on.
 
 One dispatcher thread per worker keeps the design free of async
 machinery: the thread feeds its worker one job at a time (a job is a
@@ -34,6 +43,7 @@ import subprocess
 import sys
 import threading
 import time
+import zlib
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import asdict
@@ -46,6 +56,20 @@ from repro.measure.transport import _TransportStats, _resolved
 from repro.measure.wire import read_frame, write_frame
 
 _MAX_SPAWN_FAILURES = 3                 # consecutive, per dispatcher thread
+
+
+def respawn_backoff(failures: int, *, base: float = 0.1, cap: float = 30.0,
+                    seed: int = 0) -> float:
+    """Seconds to wait before respawn attempt ``failures`` (1-based):
+    exponential in the consecutive-failure count, capped, with a
+    *deterministic* multiplicative jitter in ``[0.5, 1.0]`` derived from
+    ``(seed, failures)`` — reproducible under a fake clock, yet distinct
+    seeds (one per dispatcher) desynchronize a thundering herd."""
+    if failures < 1:
+        raise ValueError(f"failures must be >= 1, got {failures}")
+    d = min(cap, base * (2.0 ** (failures - 1)))
+    u = (zlib.crc32(f"{seed}|{failures}".encode()) % 1000) / 999.0
+    return d * (0.5 + 0.5 * u)
 
 
 def _read_frame_deadline(stream, deadline: Optional[float]):
@@ -98,13 +122,20 @@ class WorkerPoolTransport:
                     treated as wedged (killed + job requeued, same as a
                     death; ``None`` = unlimited).  Generous by default:
                     a job is a whole kernel build+measure.
+    backoff_base / backoff_cap / backoff_seed:
+                    the :func:`respawn_backoff` schedule applied between
+                    consecutive failed respawns (crash-loop breaker);
+                    each dispatcher jitters from ``backoff_seed + its
+                    index``.
     """
 
     def __init__(self, workers: int = 2, db=None,
                  runner_kwargs: Optional[dict] = None,
                  max_attempts: int = 3, factory: Optional[str] = None,
                  spawn_timeout: float = 180.0,
-                 job_timeout: Optional[float] = 900.0):
+                 job_timeout: Optional[float] = 900.0,
+                 backoff_base: float = 0.1, backoff_cap: float = 30.0,
+                 backoff_seed: int = 0):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if max_attempts < 1:
@@ -116,6 +147,10 @@ class WorkerPoolTransport:
         self.factory = factory
         self.spawn_timeout = spawn_timeout
         self.job_timeout = job_timeout
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.backoff_seed = backoff_seed
+        self._sleep = time.sleep        # seam: fake clock in backoff tests
 
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -126,12 +161,13 @@ class WorkerPoolTransport:
         self._backend: Optional[str] = None
         self._ready = 0
         self._live = workers            # dispatcher threads still running
+        self._backing_off = 0           # dispatchers sleeping out a backoff
         self._spawn_error: Optional[BaseException] = None
         self.worker_restarts = 0        # respawns after a worker death
 
         self._threads = [
-            threading.Thread(target=self._dispatch, name=f"measure-w{i}",
-                             daemon=True)
+            threading.Thread(target=self._dispatch, args=(i,),
+                             name=f"measure-w{i}", daemon=True)
             for i in range(workers)]
         for t in self._threads:
             t.start()
@@ -203,7 +239,7 @@ class WorkerPoolTransport:
             self._kill(proc)
 
     # -- the per-worker dispatcher thread ------------------------------------
-    def _dispatch(self) -> None:
+    def _dispatch(self, index: int) -> None:
         proc: Optional[subprocess.Popen] = None
         counted_ready = False
         spawn_failures = 0
@@ -228,12 +264,22 @@ class WorkerPoolTransport:
                                 job = None
                                 self._cv.notify_all()
                                 return
-                            self._requeue_or_fail(job)
+                            self._requeue_or_fail(
+                                job, reason=f"respawn failed "
+                                f"({type(e).__name__})")
                             job = None
                             self._cv.notify_all()
                             if spawn_failures >= _MAX_SPAWN_FAILURES:
                                 return
-                        time.sleep(0.1 * spawn_failures)
+                            self._backing_off += 1
+                        try:
+                            self._sleep(respawn_backoff(
+                                spawn_failures, base=self.backoff_base,
+                                cap=self.backoff_cap,
+                                seed=self.backoff_seed + index))
+                        finally:
+                            with self._cv:
+                                self._backing_off -= 1
                         continue
                     if not counted_ready:
                         counted_ready = True
@@ -262,16 +308,19 @@ class WorkerPoolTransport:
                         if msg.get("type") == "result" \
                                 and msg.get("id") == job_id:
                             break
-                except (OSError, EOFError, ValueError):
+                except (OSError, EOFError, ValueError) as e:
                     # the worker died — or wedged past job_timeout
                     # (TimeoutError is an OSError) — holding this job:
                     # requeue (or fail closed) and respawn on the next
                     # loop iteration
                     self._kill(proc)
                     proc = None
+                    reason = "wedged (job timeout)" \
+                        if isinstance(e, TimeoutError) \
+                        else f"worker died ({type(e).__name__})"
                     with self._cv:
                         self.worker_restarts += 1
-                        self._requeue_or_fail(job)
+                        self._requeue_or_fail(job, reason=reason)
                         job = None
                         self._cv.notify_all()
                     continue
@@ -291,7 +340,8 @@ class WorkerPoolTransport:
                 self._cv.notify_all()
 
     # call with self._lock held
-    def _requeue_or_fail(self, job: Optional[_Job], hard: bool = False) -> None:
+    def _requeue_or_fail(self, job: Optional[_Job], hard: bool = False,
+                         reason: str = "worker death") -> None:
         if job is None:
             return
         job.attempts += 1
@@ -299,11 +349,12 @@ class WorkerPoolTransport:
             # fail closed: same marker as a kernel that cannot build.
             # Only the attempts-exhausted verdict is *persisted* — the
             # job itself killed max_attempts workers, so the DB should
-            # remember it.  hard failures are pool infrastructure
-            # problems (spawn failures, shutdown): the pair was never
-            # tried, and a persisted inf would poison every future run.
+            # quarantine it (no future run in any process re-attempts
+            # it).  hard failures are pool infrastructure problems
+            # (spawn failures, shutdown): the pair was never tried, and
+            # a persisted inf would poison every future run.
             if not hard and self.db is not None:
-                self.db.put(job.key, float("inf"))
+                self.db.quarantine(job.key, job.attempts, reason)
             self._stats.failed_pairs += 1
             self._inflight.pop(job.key, None)
             job.future.set_result(float("inf"))
@@ -369,11 +420,27 @@ class WorkerPoolTransport:
         if self.db is not None:
             self.db.close()
 
+    def health(self) -> str:
+        """``ok`` — full complement of dispatchers, none backing off;
+        ``degraded`` — workers lost or sleeping out a respawn backoff;
+        ``down`` — closed, or no dispatcher can make progress."""
+        with self._cv:
+            return self._health_locked()
+
+    def _health_locked(self) -> str:
+        if self._closing or self._live == 0:
+            return "down"
+        if self._backing_off or self._live < self.workers:
+            return "degraded"
+        return "ok"
+
     def stats(self) -> dict:
         with self._cv:
             s = self._stats.snapshot(in_flight=len(self._inflight))
+            s["health"] = self._health_locked()
         s["workers"] = self.workers
         s["worker_restarts"] = self.worker_restarts
+        s["quarantined"] = self.db.n_quarantined if self.db is not None else 0
         return s
 
     def __enter__(self) -> "WorkerPoolTransport":

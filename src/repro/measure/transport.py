@@ -141,6 +141,11 @@ class InProcessTransport:
         if self.db is not None:
             self.db.close()
 
+    def health(self) -> str:
+        """In-process: either the calling thread can measure (``ok``)
+        or the transport is closed (``down``) — nothing in between."""
+        return "down" if self._closed else "ok"
+
     def stats(self) -> dict:
         with self._lock:
             return self._stats.snapshot(in_flight=len(self._inflight))

@@ -54,6 +54,9 @@ def main() -> int:
     # the protocol owns fd 1: re-route any stray print (jax warnings,
     # user runner chatter) to stderr so it can never corrupt a frame
     proto_out = os.fdopen(os.dup(1), "wb")
+    # advertise the protocol fd so fault-injecting runners
+    # (repro.measure.faults.ChaosRunner) can tear a result frame
+    os.environ["REPRO_WORKER_PROTO_FD"] = str(proto_out.fileno())
     os.dup2(2, 1)
     sys.stdout = sys.stderr
     inp = sys.stdin.buffer

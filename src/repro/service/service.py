@@ -47,6 +47,7 @@ from repro.core.agents import BruteForceAgent, make_agent
 from repro.core.env import CostModelEnv, MeasuredEnv
 from repro.core.protocols import Agent, AsyncOracle, Oracle
 from repro.core.vectorizer import TileProgram
+from repro.ft.monitor import PreemptionHandler
 from repro.measure import TransportMeasureFn, make_transport
 
 _COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
@@ -134,6 +135,11 @@ class SessionHandle:
             self._outstanding.discard(fut)
 
     # -- observability / lifecycle -------------------------------------------
+    def health(self) -> str:
+        """``ok | degraded | down`` for this session's oracle+transport
+        pair (:func:`~repro.core.protocols.resolve_health` semantics)."""
+        return self.oracle.health()
+
     def stats(self) -> dict:
         """Per-session counters + transport deltas since ``open_session``."""
         t = self.oracle.transport
@@ -144,6 +150,7 @@ class SessionHandle:
         delta["in_flight"] = now.get("in_flight", 0)
         with self._lock:
             return {"session": self.name, "agent": self.agent.name,
+                    "health": self.oracle.health(),
                     "wall_s": time.perf_counter() - self._opened,
                     "fit_wall_s": self._fit_wall,
                     "tune_wall_s": self._tune_wall,
@@ -202,6 +209,11 @@ class TuningService:
                 timing DB, one level up.
     max_parallel_tunes: thread-pool width for :meth:`SessionHandle.
                 tune_async` (measurement parallelism is the transport's).
+    preemption: install a :class:`~repro.ft.monitor.PreemptionHandler`
+                whose SIGTERM callback is :meth:`close` — in-flight
+                tunes drain, workers stop, and every owned store/DB
+                closes cleanly before the process dies (the handler is
+                restored on close).
     runner_kwargs: :class:`~repro.measure.runner.MeasureRunner` options
                 (``reps=``, ``interpret=``, ``max_dim=``, ...) — per
                 worker under the pool transport.
@@ -212,7 +224,8 @@ class TuningService:
                  workers: Optional[int] = None,
                  db_path: Optional[str] = None, seed: int = 0,
                  program_store: Union[str, ProgramStore, None] = None,
-                 max_parallel_tunes: int = 4, **runner_kwargs):
+                 max_parallel_tunes: int = 4, preemption: bool = False,
+                 **runner_kwargs):
         self.cfg = cfg
         self.seed = seed
         if isinstance(transport, str):
@@ -233,6 +246,8 @@ class TuningService:
         self._sessions: "list[SessionHandle]" = []
         self._n_opened = 0
         self._closed = False
+        self._preemption = (PreemptionHandler(on_stop=self.close)
+                            if preemption else None)
 
     def _resolve_store(self, store: Union[str, ProgramStore, None]
                        ) -> Optional[ProgramStore]:
@@ -295,21 +310,31 @@ class TuningService:
         return self._executor.submit(fn, *args)
 
     # -- observability / lifecycle -------------------------------------------
+    def health(self) -> str:
+        """The shared transport's ``ok | degraded | down``."""
+        h = getattr(self.transport, "health", None)
+        return h() if callable(h) else "ok"
+
     def stats(self) -> dict:
         return {"sessions_open": sum(not s._closed for s in self._sessions),
                 "sessions_total": self._n_opened,
                 "owns_transport": self._owns_transport,
+                "health": self.health(),
                 "transport": self.transport.stats()}
 
     def close(self) -> None:
-        """Close every session, stop the tune pool, and — when the
+        """Drain every session, stop the tune pool, and — when the
         service built them — close the transport and any program stores
-        it opened from paths.  Idempotent."""
+        it opened from paths.  Idempotent; also the SIGTERM drain path
+        under ``preemption=True``."""
         if self._closed:
             return
+        self._closed = True
+        if self._preemption is not None:
+            self._preemption.restore()
+            self._preemption = None
         for s in self._sessions:
             s.close()
-        self._closed = True
         self._executor.shutdown(wait=True)
         if self._owns_transport:
             self.transport.close()

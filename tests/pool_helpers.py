@@ -123,3 +123,72 @@ def boom_once():
 
 def boom_always():
     return _BoomRunner(transient=False)
+
+
+# -- chaos factories (PR 6) -------------------------------------------------
+
+def chaos():
+    """A :class:`repro.measure.faults.ChaosRunner` around a configurable
+    base factory — the worker-side half of the chaos conformance runs.
+
+    ``REPRO_CHAOS_BASE``  base factory (default the deterministic one),
+    ``REPRO_CHAOS_SEED``  fault-schedule seed,
+    ``REPRO_CHAOS_STATE`` one-shot sentinel directory (required).
+    """
+    import importlib
+
+    from repro.measure.faults import ChaosRunner, FaultSchedule
+
+    base_spec = os.environ.get("REPRO_CHAOS_BASE",
+                               "pool_helpers:deterministic")
+    mod, _, attr = base_spec.partition(":")
+    base = getattr(importlib.import_module(mod), attr)()
+    return ChaosRunner(base,
+                       FaultSchedule(int(os.environ.get("REPRO_CHAOS_SEED",
+                                                        "0"))),
+                       os.environ["REPRO_CHAOS_STATE"], hang_s=3600.0)
+
+
+class _TornOnceRunner(FakeRunner):
+    """Tears the protocol pipe (and dies) the first time it sees the site
+    named ``"torn"`` — sentinel ``REPRO_TEST_TORN_FILE`` — then measures
+    it normally on the respawned worker: the torn-result-frame analogue
+    of ``boom_once``."""
+
+    def __call__(self, sites, tiles):
+        from repro.measure.faults import _tear_frame
+
+        sentinel = os.environ.get("REPRO_TEST_TORN_FILE", "")
+        for s in sites:
+            if s.site == "torn" and sentinel and not os.path.exists(sentinel):
+                with open(sentinel, "w") as f:
+                    f.write("tore once\n")
+                _tear_frame(int(os.environ["REPRO_WORKER_PROTO_FD"]), 1)
+                os._exit(3)
+        return super().__call__(sites, tiles)
+
+
+def torn_once():
+    return _TornOnceRunner()
+
+
+class _DieOnJobRunner(FakeRunner):
+    """Dies on the first job it receives — setup for the crash-loop
+    backoff test (the respawn then fails via ``spawn_flaky``)."""
+
+    def __call__(self, sites, tiles):
+        os._exit(3)
+
+
+def spawn_flaky():
+    """First spawn hands out a runner that dies on any job; every later
+    spawn fails *during the handshake* — driving the dispatcher through
+    its respawn-backoff loop until ``_MAX_SPAWN_FAILURES``.  Sentinel:
+    ``REPRO_TEST_SPAWN_FILE``."""
+    sentinel = os.environ["REPRO_TEST_SPAWN_FILE"]
+    try:
+        fd = os.open(sentinel, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        os._exit(2)                 # spawn failure: no ready handshake
+    os.close(fd)
+    return _DieOnJobRunner()

@@ -1,0 +1,139 @@
+"""The transport conformance suite, re-run under injected faults.
+
+The tentpole proof of PR 6: every invariant the contract suite in
+``test_transport.py`` pins down — exact values, submission-order futures,
+duplicate-key coalescing, exactly-once DB writes, fail-closed inf,
+drain-never-hangs — must survive workers that crash mid-job, wedge past
+``job_timeout``, and tear result frames mid-write.  The suite itself is
+imported *unmodified*; only its module-global ``_make`` factory is
+swapped for one that wraps every transport in
+:class:`~repro.measure.faults.FaultInjectionTransport` and (for the
+pool) runs a :class:`~repro.measure.faults.ChaosRunner` inside the real
+worker subprocesses.
+
+Faults are deterministic (pure function of seed + event key) and
+destructive ones are one-shot, so a retried job recovers within the
+pool's attempt budget and the value/DB assertions remain exact.
+"""
+import inspect
+import os
+
+import numpy as np
+import pytest
+
+from repro.measure import (ChaosRunner, FaultInjectionTransport,
+                           FaultSchedule, InProcessTransport, MeasureDB,
+                           WorkerPoolTransport, make_key)
+
+import test_transport as tt
+from pool_helpers import FakeRunner, fake_value
+
+SEEDS = (0, 1)
+
+
+def _chaos_make(kind, db_path=None, factory="pool_helpers:deterministic",
+                **kw):
+    seed = int(os.environ["REPRO_CHAOS_SEED"])
+    if kind == "inproc":
+        runner = kw.pop("runner", None) or FakeRunner()
+        assert not kw
+        inner = InProcessTransport(
+            runner, MeasureDB(db_path) if db_path else None)
+        return FaultInjectionTransport(inner, seed=seed)
+    os.environ["REPRO_CHAOS_BASE"] = factory
+    inner = WorkerPoolTransport(workers=2, db=db_path,
+                                factory="pool_helpers:chaos",
+                                job_timeout=2.0, **kw)
+    return FaultInjectionTransport(inner, seed=seed)
+
+
+# collected as plain callables (not via pytest collection of the other
+# module) so each case runs here with the swapped factory
+CONFORMANCE = [f for name, f in sorted(vars(tt).items())
+               if name.startswith("test_conformance_")]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("kind", tt.TRANSPORTS)
+@pytest.mark.parametrize("case", CONFORMANCE, ids=lambda c: c.__name__)
+def test_conformance_suite_survives_faults(case, kind, seed, tmp_path,
+                                           monkeypatch):
+    state = tmp_path / "chaos_state"
+    state.mkdir()
+    monkeypatch.setenv("REPRO_CHAOS_STATE", str(state))
+    monkeypatch.setenv("REPRO_CHAOS_SEED", str(seed))
+    monkeypatch.setattr(tt, "_make", _chaos_make)
+    kwargs = ({"tmp_path": tmp_path}
+              if "tmp_path" in inspect.signature(case).parameters else {})
+    case(kind, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the fault-injection machinery itself
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_is_deterministic_and_seed_sensitive():
+    a = FaultSchedule(seed=0)
+    b = FaultSchedule(seed=0)
+    c = FaultSchedule(seed=1)
+    keys = [f"site-{i}|(8, 8, 8)" for i in range(200)]
+    draws_a = [a.draw(k) for k in keys]
+    assert draws_a == [b.draw(k) for k in keys]      # pure function
+    assert draws_a != [c.draw(k) for k in keys]      # seed matters
+    fired = [d for d in draws_a if d is not None]
+    # ~50% fault rate spread over every fault kind
+    assert 40 < len(fired) < 160
+    assert set(fired) == set(FaultSchedule().faults)
+    with pytest.raises(ValueError, match="period"):
+        FaultSchedule(period=0)
+
+
+def test_fault_injection_transport_is_correctness_invisible():
+    """Values, coalescing (future identity), counters and health pass
+    through the wrapper untouched; only latency changes."""
+    inner = InProcessTransport(FakeRunner())
+    t = FaultInjectionTransport(inner, seed=0, noise_s=0.001)
+    assert t.backend_key == inner.backend_key
+    f = t.submit([tt.MM, tt.MM], np.array([[16, 128, 128]] * 2))
+    t.drain()
+    assert f[0] is f[1]                              # coalescing intact
+    assert f[0].result() == fake_value(tt.MM.key(), (16, 128, 128))
+    st = t.stats()
+    assert st["misses"] == 1 and st["coalesced"] == 1
+    assert "faults_injected" in st
+    assert t.health() == "ok"
+    t.close()
+    assert t.health() == "down"                      # delegated, not local
+    with pytest.raises(RuntimeError, match="closed"):
+        t.submit([tt.MM], np.array([[16, 128, 128]]))
+
+
+def test_chaos_runner_noise_never_alters_values(tmp_path):
+    """A schedule of pure timing noise returns bit-identical values."""
+    state = tmp_path / "state"
+    state.mkdir()
+    r = ChaosRunner(FakeRunner(), FaultSchedule(seed=3, faults=("noise",)),
+                    str(state), noise_s=0.001)
+    out = r(tt.SITES, tt.TILES)
+    np.testing.assert_array_equal(
+        out, [fake_value(s.key(), t) for s, t in zip(tt.SITES, tt.TILES)])
+    assert r.backend_key == "fake-backend"
+
+
+def test_pool_torn_result_frame_requeues_and_recovers(tmp_path,
+                                                      monkeypatch):
+    """A worker that tears its result frame mid-write costs one attempt;
+    the requeued job succeeds on the respawn with the identical value."""
+    sentinel = str(tmp_path / "tore_once")
+    monkeypatch.setenv("REPRO_TEST_TORN_FILE", sentinel)
+    torn = tt.KernelSite(site="torn", kind="matmul", m=64, n=128, k=128)
+    with WorkerPoolTransport(workers=2,
+                             factory="pool_helpers:torn_once") as t:
+        futs = t.submit([torn, tt.MM], np.array([[16, 128, 128]] * 2))
+        t.drain()
+        assert futs[0].result() == fake_value(torn.key(), (16, 128, 128))
+        assert futs[1].result() == fake_value(tt.MM.key(), (16, 128, 128))
+        st = t.stats()
+        assert st["retries"] >= 1 and st["worker_restarts"] >= 1
+        assert st["failed_pairs"] == 0
+    assert os.path.exists(sentinel)                  # it really tore

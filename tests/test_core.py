@@ -181,12 +181,13 @@ def test_polly_beats_baseline_on_bandwidth_bound():
     assert ENV.speedup(s, a) >= 0.95
 
 
-def test_polly_action_shim_warns():
-    from repro.core.agents import polly_action
-    s = _mm(65536, 512, 512)
-    with pytest.warns(DeprecationWarning, match="polly_action"):
-        a = polly_action(SPACE, s)
-    np.testing.assert_array_equal(a, PollyAgent(SPACE).act([s])[0])
+def test_polly_action_export_removed():
+    # the deprecated per-site shim completed its removal cycle (PR 6):
+    # the supported spelling is make_agent("polly", cfg).act(sites)
+    import repro.core.agents as agents
+    assert not hasattr(agents, "polly_action")
+    assert not hasattr(agents.polly, "polly_action")
+    assert "polly_action" not in agents.__all__
 
 
 # ---------------------------------------------------------------------------

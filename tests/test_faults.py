@@ -1,0 +1,262 @@
+"""Pool hardening + graceful degradation (PR 6): respawn backoff,
+poison-job quarantine across processes, the MeasuredEnv circuit breaker,
+health reporting end to end, and SIGTERM draining a live service."""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import NeuroVectorizer, NeuroVecConfig, TileProgram
+from repro.core.env import MeasuredEnv
+from repro.core.protocols import AsyncOracle, resolve_health
+from repro.measure import (InProcessTransport, MeasureDB,
+                           WorkerPoolTransport, make_key, respawn_backoff)
+from repro.service import TuningService
+from repro.models.compute import KernelSite
+
+from pool_helpers import FakeRunner, fake_value
+
+SMALL = NeuroVecConfig(
+    bm_choices=(16, 32), bn_choices=(128,), bk_choices=(128,),
+    bq_choices=(64,), bkv_choices=(128,), chunk_choices=(32,))
+
+MM = KernelSite(site="f.mm", kind="matmul", m=32, n=128, k=128)
+ATTN = KernelSite(site="f.attn", kind="attention", m=64, n=32, k=64,
+                  batch=2, causal=True)
+SITES = [MM, ATTN]
+
+
+# ---------------------------------------------------------------------------
+# respawn backoff
+# ---------------------------------------------------------------------------
+
+def test_respawn_backoff_schedule_properties():
+    # deterministic: same (failures, seed) -> same delay
+    assert respawn_backoff(1) == respawn_backoff(1)
+    assert respawn_backoff(3, seed=7) == respawn_backoff(3, seed=7)
+    # jitter bounds: [0.5, 1.0] x the exponential envelope
+    for n in range(1, 10):
+        d = respawn_backoff(n, base=0.1, cap=30.0, seed=5)
+        env = min(30.0, 0.1 * 2.0 ** (n - 1))
+        assert 0.5 * env <= d <= env
+    # grows (envelope doubles, jitter cannot undo a doubling fully
+    # across 2 steps)
+    assert respawn_backoff(6) > respawn_backoff(1)
+    # cap holds
+    assert respawn_backoff(60, base=0.1, cap=30.0) <= 30.0
+    # distinct seeds desynchronize
+    assert len({respawn_backoff(4, seed=s) for s in range(8)}) > 1
+    with pytest.raises(ValueError, match="failures"):
+        respawn_backoff(0)
+
+
+def test_dispatcher_backoff_is_deterministic_under_fake_clock(
+        tmp_path, monkeypatch):
+    """A crash-looping backend drives the dispatcher through exactly the
+    respawn_backoff schedule (observed via the _sleep seam — a fake
+    clock), and the stranded job fails closed WITHOUT being quarantined
+    (spawn failures are pool trouble, not the job's fault)."""
+    monkeypatch.setenv("REPRO_TEST_SPAWN_FILE", str(tmp_path / "spawned"))
+    p = str(tmp_path / "m.jsonl")
+    t = WorkerPoolTransport(workers=1, db=p,
+                            factory="pool_helpers:spawn_flaky",
+                            backoff_base=0.05, backoff_seed=42)
+    recorded = []
+    t._sleep = recorded.append          # fake clock: record, don't wait
+    futs = t.submit([MM], np.array([[16, 128, 128]]))
+    assert futs[0].result(timeout=60) == float("inf")
+    t.drain()
+    # sleeps happen for consecutive failures 1.._MAX_SPAWN_FAILURES-1
+    assert recorded == [
+        respawn_backoff(1, base=0.05, cap=30.0, seed=42),
+        respawn_backoff(2, base=0.05, cap=30.0, seed=42)]
+    assert t.health() == "down"         # every dispatcher gave up
+    t.close()
+    db = MeasureDB(p)
+    key = make_key(MM.key(), (16, 128, 128), "fake-backend")
+    assert db.get(key) is None          # hard failure: nothing persisted
+    assert db.n_quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# poison-job quarantine
+# ---------------------------------------------------------------------------
+
+def test_quarantine_persists_and_blocks_reattempts_across_processes(
+        tmp_path):
+    """A pair that kills workers max_attempts times is quarantined in the
+    DB; a second pool over the same path serves inf from the quarantine
+    record — zero attempts, zero worker deaths."""
+    p = str(tmp_path / "m.jsonl")
+    boom = KernelSite(site="boom", kind="matmul", m=64, n=128, k=128)
+    with WorkerPoolTransport(workers=2, db=p,
+                             factory="pool_helpers:boom_always",
+                             max_attempts=2) as t1:
+        futs = t1.submit([boom, MM], np.array([[16, 128, 128]] * 2))
+        t1.drain()
+        assert futs[0].result() == float("inf")
+        backend = t1.backend_key
+        assert t1.stats()["quarantined"] == 1
+    key = make_key(boom.key(), (16, 128, 128), backend)
+    rec = MeasureDB(p).quarantined(key)
+    assert rec is not None and rec["attempts"] == 2
+    assert "died" in rec["reason"] or "worker" in rec["reason"]
+
+    # "fresh process": a new pool over the same DB path
+    with WorkerPoolTransport(workers=2, db=p,
+                             factory="pool_helpers:boom_always",
+                             max_attempts=2) as t2:
+        futs = t2.submit([boom], np.array([[16, 128, 128]]))
+        t2.drain()
+        assert futs[0].result() == float("inf")
+        st = t2.stats()
+    assert st["hits"] == 1 and st["misses"] == 0   # never re-submitted
+    assert st["worker_restarts"] == 0              # no worker died for it
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker -> cost-model fallback
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_on_raising_hook_and_tune_completes():
+    """Transport fully down: the facade still tunes (analytic fallback)
+    and reports health() == 'degraded' — the acceptance criterion."""
+    t = InProcessTransport(FakeRunner())
+    nv = NeuroVectorizer(SMALL, agent="brute", oracle="measured",
+                         transport=t)
+    assert nv.health() == "ok"
+    t.close()                           # backend collapses under the facade
+    prog = nv.fit(SITES).tune_sites(SITES)
+    assert isinstance(prog, TileProgram)
+    assert set(prog.tiles) == {s.key() for s in SITES}
+    assert all(np.isfinite(v).all() for v in prog.tiles.values())
+    assert nv.health() == "degraded"
+    assert nv.oracle.breaker_open
+    assert "raised" in nv.oracle.degraded_reason
+    assert nv.oracle.measure_calls == 0            # nothing was measured
+    # degraded oracle still prices finitely (model, not all-inf)
+    assert np.isfinite(nv.oracle.costs_batch(
+        SITES, np.zeros((2, 3), np.int64))).all()
+
+
+MM2 = KernelSite(site="f.mm2", kind="matmul", m=64, n=128, k=128)
+
+
+def test_breaker_trips_after_consecutive_all_failed_batches():
+    calls = []
+
+    def all_fail(sites, tiles):
+        calls.append(len(sites))
+        return np.full(len(sites), np.nan)
+
+    mms = [MM, MM2]
+    env = MeasuredEnv(SMALL, measure_fn=all_fail, breaker_threshold=2)
+    a0 = np.zeros((2, 3), np.int64)          # tiles (16, 128, 128)
+    # batch 1: honest fail-closed data, breaker stays armed
+    c1 = env.costs_batch(mms, a0)
+    assert not env.breaker_open and np.isinf(c1).all()
+    assert env.health() == "ok"
+    # batch 2 mixes one cached-failed key with one fresh key; the fresh
+    # key also fails -> the streak trips the breaker mid-batch, and BOTH
+    # entries come back analytic (the purged verdict re-prices too)
+    c2 = env.costs_batch(mms, np.array([[0, 0, 0], [1, 0, 0]]))
+    assert env.breaker_open and env.health() == "degraded"
+    assert np.isfinite(c2).all()
+    assert "consecutive" in env.degraded_reason
+    # cached failure verdicts from the collapse were purged: re-pricing
+    # batch 1 now uses the model, and the dead hook is never called again
+    n_calls = len(calls)
+    c1b = env.costs_batch(mms, a0)
+    assert np.isfinite(c1b).all()
+    assert len(calls) == n_calls
+    # recovery is explicit
+    env.reset_breaker()
+    assert env.health() == "ok" and not env.breaker_open
+
+
+def test_breaker_not_tripped_by_single_flaky_batch():
+    flaky = {"n": 0}
+
+    def sometimes(sites, tiles):
+        flaky["n"] += 1
+        if flaky["n"] == 1:
+            return np.full(len(sites), np.nan)
+        return np.array([fake_value(s.key(), t)
+                         for s, t in zip(sites, tiles)])
+
+    mms = [MM, MM2]
+    env = MeasuredEnv(SMALL, measure_fn=sometimes, breaker_threshold=2)
+    c1 = env.costs_batch(mms, np.zeros((2, 3), np.int64))
+    assert np.isinf(c1).all()           # honest fail-closed, no fallback
+    c2 = env.costs_batch(mms, np.array([[1, 0, 0]] * 2))
+    assert np.isfinite(c2).all()        # success resets the streak
+    assert not env.breaker_open and env.health() == "ok"
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        MeasuredEnv(SMALL, breaker_threshold=0)
+
+
+def test_resolve_health_matrix():
+    class H:
+        def __init__(self, h):
+            self._h = h
+
+        def health(self):
+            return self._h
+
+    class DegradableOracle(H):
+        can_degrade = True
+
+    assert resolve_health(object()) == "ok"            # no health member
+    assert resolve_health(H("ok"), H("ok")) == "ok"
+    assert resolve_health(H("degraded"), H("ok")) == "degraded"
+    assert resolve_health(H("ok"), H("degraded")) == "degraded"
+    # down transport + degradable oracle = degraded, not down
+    assert resolve_health(DegradableOracle("ok"), H("down")) == "degraded"
+    assert resolve_health(H("ok"), H("down")) == "down"
+
+
+def test_health_surfaces_through_service_and_async_oracle():
+    t = WorkerPoolTransport(workers=2,
+                            factory="pool_helpers:deterministic")
+    with TuningService(SMALL, transport=t) as svc:
+        assert svc.health() == "ok"
+        assert svc.stats()["health"] == "ok"
+        s = svc.open_session(agent="brute", oracle="measured")
+        assert isinstance(s.oracle, AsyncOracle)
+        assert s.health() == "ok"
+        assert s.stats()["health"] == "ok"
+        assert "health" in t.stats()
+    # service closed (borrowed transport still open)
+    assert t.health() == "ok"
+    t.close()
+    assert t.health() == "down"
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM drains a live session
+# ---------------------------------------------------------------------------
+
+def test_sigterm_drains_inflight_tunes_and_closes_service():
+    prev = signal.getsignal(signal.SIGTERM)
+    t = WorkerPoolTransport(workers=2, factory="pool_helpers:slow")
+    svc = TuningService(SMALL, transport=t, preemption=True)
+    try:
+        assert signal.getsignal(signal.SIGTERM) != prev  # handler installed
+        s = svc.open_session(agent="brute", oracle="measured")
+        fut = s.fit(SITES).tune_async(SITES)
+        os.kill(os.getpid(), signal.SIGTERM)
+        deadline = time.monotonic() + 120
+        while not svc._closed and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert svc._closed                    # the handler drained + closed
+        assert fut.done()                     # in-flight tune finished
+        prog = fut.result()
+        assert isinstance(prog, TileProgram) and len(prog.tiles) == 2
+        assert signal.getsignal(signal.SIGTERM) == prev  # handler restored
+        with pytest.raises(RuntimeError, match="closed"):
+            s.tune(SITES)
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+        t.close()

@@ -112,6 +112,47 @@ def test_db_corrupted_file_recovery(tmp_path):
     assert MeasureDB(p).get("d") == 3.0
 
 
+def test_db_torn_trailing_line_recovery(tmp_path):
+    """A crash mid-append leaves a partial record with no newline; the
+    next open must keep every intact line AND isolate the torn tail so
+    the first new append cannot merge into it."""
+    p = str(tmp_path / "m.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"k": "a", "v": 1.0}) + "\n")
+        f.write(json.dumps({"k": "b", "v": 2.0}) + "\n")
+        f.write('{"k": "c", "v": 3.')           # torn: no newline
+    db = MeasureDB(p)
+    assert db.get("a") == 1.0 and db.get("b") == 2.0
+    assert db.get("c") is None
+    assert db.skipped_lines == 1
+    db.put("d", 3.0)                     # must land on a fresh line
+    db.close()
+    db2 = MeasureDB(p)
+    assert db2.get("d") == 3.0
+    assert db2.get("a") == 1.0 and db2.get("b") == 2.0
+    assert db2.skipped_lines == 1        # torn tail still isolated, not
+    assert len(db2) == 3                 # merged into the new record
+
+
+def test_db_quarantine_roundtrip_and_lru_survival(tmp_path):
+    p = str(tmp_path / "m.jsonl")
+    db = MeasureDB(p, max_entries=1)
+    db.quarantine("poison", attempts=3, reason="killed workers")
+    db.put("x", 1.0)                     # evicts "poison" from the LRU
+    db.put("y", 2.0)
+    assert db.get("poison") == float("inf")   # survives LRU eviction
+    assert db.n_quarantined == 1
+    db.close()
+    db2 = MeasureDB(p)                   # fresh process analogue
+    assert db2.get("poison") == float("inf")
+    assert db2.quarantined("poison") == {"attempts": 3,
+                                         "reason": "killed workers"}
+    assert db2.quarantined("x") is None
+    # backward compatible: an old reader sees a plain failed measurement
+    rec = json.loads(open(p).readline())
+    assert rec["v"] is None and rec["kind"] == "quarantine"
+
+
 def test_db_duplicate_key_last_wins(tmp_path):
     p = str(tmp_path / "m.jsonl")
     db = MeasureDB(p)
