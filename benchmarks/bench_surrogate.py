@@ -1,0 +1,144 @@
+"""Benchmark of the learned cost model (``repro.surrogate``).
+
+``BENCH_measure.json`` established the problem: the analytic model's tile
+ranking barely correlates with measured time (mean Spearman ~0.19).  This
+benchmark measures the two things the surrogate exists for, and writes
+``BENCH_surrogate.json``:
+
+* ``rank_correlation`` — per-site Spearman of *surrogate-predicted* vs
+  measured cost over the full action grid, side by side with the analytic
+  model's correlation on the identical grid.  The surrogate trains only on
+  the MeasureDB the full sweep just produced — exactly the corpus a real
+  autotuning installation accumulates for free.
+* ``pruning`` — the payoff, measured two ways.  *Timed-pair reduction*:
+  a fresh-DB tuning pass with ``prune_topk=K`` must submit a fraction of
+  the full grid's pairs to the runner.  *Best-tile agreement*: a pruned
+  pass against the warm DB (identical measured values; only the pruning
+  decision differs) must select the same per-site best tile as the
+  exhaustive sweep.  Agreement is deliberately evaluated with
+  measurements held fixed — interpret-mode timings are noisy enough
+  that two *unpruned* sweeps disagree on near-tied winners, which would
+  measure noise, not pruning.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_surrogate`` (env
+``BENCH_FAST=1`` trims the grid via ``bench_measure``'s config;
+``BENCH_SURROGATE_OUT`` overrides the output path;
+``BENCH_SURROGATE_TOPK`` overrides the pruning width, default 4).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_measure import CFG, FAST, REPS, _sites, _spearman
+from repro.core.env import CostModelEnv
+from repro.measure import make_measured_env
+from repro.surrogate import SurrogateOracle, train_from_db
+
+OUT = os.environ.get("BENCH_SURROGATE_OUT", "BENCH_surrogate.json")
+TOPK = int(os.environ.get("BENCH_SURROGATE_TOPK", "4"))
+
+
+def _best(row: np.ndarray) -> int:
+    return int(np.argmin(np.where(np.isfinite(row), row, np.inf)))
+
+
+def run() -> dict:
+    tmp = tempfile.mkdtemp(prefix="bench_surrogate_")
+    db_full = os.path.join(tmp, "full.jsonl")
+    db_pruned = os.path.join(tmp, "pruned.jsonl")
+    sites = _sites()
+
+    # -- full exhaustive sweep: the training corpus + the ground truth ------
+    env_full = make_measured_env(CFG, db_path=db_full, reps=REPS, warmup=1)
+    t0 = time.perf_counter()
+    grid_meas = env_full.cost_grid(sites)
+    wall_full = time.perf_counter() - t0
+    full_pairs = env_full.measure_fn.runner.timed_pairs
+
+    # -- train the surrogate on exactly that DB -----------------------------
+    t0 = time.perf_counter()
+    model = train_from_db(db_full)
+    wall_train = time.perf_counter() - t0
+    assert model is not None, "full sweep left the DB too cold to train"
+
+    # -- rank agreement with measured, surrogate vs analytic ----------------
+    grid_sur = SurrogateOracle(CFG, model).cost_grid(sites)
+    grid_ana = CostModelEnv(CFG).cost_grid(sites)
+    rho_sur = [_spearman(grid_meas[i], grid_sur[i])
+               for i in range(len(sites))]
+    rho_ana = [_spearman(grid_meas[i], grid_ana[i])
+               for i in range(len(sites))]
+
+    # -- pruned pass on a fresh DB: the timed-pair reduction ----------------
+    env_p = make_measured_env(CFG, db_path=db_pruned, reps=REPS, warmup=1,
+                              prune_topk=TOPK, surrogate=model)
+    t0 = time.perf_counter()
+    env_p.cost_grid(sites)
+    wall_pruned = time.perf_counter() - t0
+    pruned_timed = env_p.measure_fn.runner.timed_pairs
+
+    # -- pruned pass on the warm DB: best-tile agreement, noise held fixed --
+    env_w = make_measured_env(CFG, db_path=db_full, reps=REPS, warmup=1,
+                              prune_topk=TOPK, surrogate=model)
+    grid_pruned = env_w.cost_grid(sites)
+    assert env_w.measure_fn.runner.timed_pairs == 0, \
+        "warm-DB pruned pass must re-time nothing"
+    matches = [_best(grid_pruned[i]) == _best(grid_meas[i])
+               for i in range(len(sites))]
+
+    def _mean(rhos):
+        d = [r for r in rhos if not np.isnan(r)]
+        return float(np.mean(d)) if d else None
+
+    results = {
+        "config": {"fast": FAST, "reps": REPS, "prune_topk": TOPK,
+                   "n_sites": len(sites),
+                   "backend": env_full.measure_fn.runner.backend_key,
+                   "ensemble": model.ensemble,
+                   "corpus_pairs": full_pairs},
+        "rank_correlation": {
+            "per_site_surrogate": {
+                s.site: (None if np.isnan(r) else r)
+                for s, r in zip(sites, rho_sur)},
+            "per_site_analytic": {
+                s.site: (None if np.isnan(r) else r)
+                for s, r in zip(sites, rho_ana)},
+            "mean_spearman_surrogate": _mean(rho_sur),
+            "mean_spearman_analytic": _mean(rho_ana)},
+        "pruning": {
+            "full_timed_pairs": full_pairs,
+            "pruned_timed_pairs": pruned_timed,
+            "surrogate_priced_pairs": env_p.pruned_pairs,
+            "timed_fraction": pruned_timed / max(full_pairs, 1),
+            "best_tile_matches": int(sum(matches)),
+            "best_tile_match_per_site": {
+                s.site: bool(m) for s, m in zip(sites, matches)},
+            "wall_full_s": wall_full,
+            "wall_pruned_s": wall_pruned,
+            "wall_train_s": wall_train},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    rc = results["rank_correlation"]
+    print(f"bench_surrogate,mean_spearman_surrogate,"
+          f"{rc['mean_spearman_surrogate']:.3f}")
+    print(f"bench_surrogate,mean_spearman_analytic,"
+          f"{rc['mean_spearman_analytic']:.3f}")
+    pr = results["pruning"]
+    print(f"bench_surrogate,timed_fraction,{pr['timed_fraction']:.2f} "
+          f"({pr['pruned_timed_pairs']}/{pr['full_timed_pairs']} pairs)")
+    print(f"bench_surrogate,best_tile_matches,"
+          f"{pr['best_tile_matches']}/{len(sites)}")
+    print(f"bench_surrogate,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

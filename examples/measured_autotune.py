@@ -56,6 +56,11 @@ def main(argv=None):
                     help="persistent measurement-DB path")
     ap.add_argument("--reps", type=int, default=1,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--prune-topk", type=int, default=None,
+                    help="only time each site's top-K surrogate-ranked "
+                         "tile candidates; the rest are priced by a "
+                         "learned cost model trained from --db "
+                         "(needs a warm DB — run once without it first)")
     ap.add_argument("--transport", choices=("inproc", "pool"),
                     default="inproc",
                     help="measure in this process or across a subprocess "
@@ -64,6 +69,10 @@ def main(argv=None):
                     help="pool size for --transport pool")
     ap.add_argument("--out", default="/tmp/repro_measured_tiles.json")
     args = ap.parse_args(argv)
+    if args.reps < 1:
+        ap.error(f"--reps must be >= 1, got {args.reps}")
+    if args.prune_topk is not None and args.prune_topk < 1:
+        ap.error(f"--prune-topk must be >= 1, got {args.prune_topk}")
 
     from repro.api import NeuroVectorizer, TileProgram
 
@@ -73,6 +82,7 @@ def main(argv=None):
                          db_path=args.db, transport=args.transport,
                          workers=(args.workers
                                   if args.transport == "pool" else None),
+                         prune_topk=args.prune_topk,
                          oracle_kwargs=dict(reps=args.reps, warmup=1))
     print(f"== fit {args.agent} vs measured oracle "
           f"(transport={args.transport}, "
@@ -95,6 +105,11 @@ def main(argv=None):
           f"{st['coalesced']} coalesced "
           f"(hit rate {st['hit_rate']:.2f}) — rerun with the same --db "
           f"and timed goes to 0")
+    if args.prune_topk is not None:
+        state = ("active" if nv.oracle.prune_active
+                 else "inactive (DB too cold to train the surrogate)")
+        print(f"pruning top-{args.prune_topk}: {state}, "
+              f"{nv.oracle.pruned_pairs} pairs surrogate-priced")
     nv.close()                 # release pool workers / the DB file handle
     return prog
 

@@ -32,11 +32,20 @@ def main(argv=None):
                     help="PPO environment steps for the RL session")
     ap.add_argument("--reps", type=int, default=1,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--prune-topk", type=int, default=None,
+                    help="only time each site's top-K surrogate-ranked "
+                         "tile candidates per session; the rest are priced "
+                         "by a learned cost model trained from --db "
+                         "(needs a warm DB — run once without it first)")
     ap.add_argument("--chaos", action="store_true",
                     help="after the normal run, hard-kill the transport "
                          "and prove tuning degrades to the cost model "
                          "(prints the resulting health line)")
     args = ap.parse_args(argv)
+    if args.reps < 1:
+        ap.error(f"--reps must be >= 1, got {args.reps}")
+    if args.prune_topk is not None and args.prune_topk < 1:
+        ap.error(f"--prune-topk must be >= 1, got {args.prune_topk}")
 
     from measured_autotune import demo_sites, small_cfg
     from repro.api import TileProgram, TuningService
@@ -48,8 +57,10 @@ def main(argv=None):
                        db_path=args.db, reps=args.reps, warmup=1) as svc:
         print(f"== TuningService: pool of {args.workers} workers "
               f"({svc.transport.backend_key}) ==")
-        rl = svc.open_session(agent="ppo", oracle="measured")
-        sweep = svc.open_session(agent="brute", oracle="measured")
+        rl = svc.open_session(agent="ppo", oracle="measured",
+                              prune_topk=args.prune_topk)
+        sweep = svc.open_session(agent="brute", oracle="measured",
+                                 prune_topk=args.prune_topk)
 
         # brute's exhaustive grid sweep measures concurrently with PPO
         # training — overlapping pairs coalesce inside the transport

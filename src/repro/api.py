@@ -85,8 +85,11 @@ from repro.core.vectorizer import (TileProgram, baseline_program, inject,
 from repro.measure import (TRANSPORT_NAMES, CachedMeasureFn,
                            InProcessTransport, MeasureDB, MeasureRunner,
                            TransportMeasureFn, WorkerPoolTransport,
-                           make_measured_env, make_transport)
+                           make_measured_env, make_transport,
+                           resolve_surrogate)
 from repro.service import SessionHandle, TuningService
+from repro.surrogate import (SurrogateModel, SurrogateOracle, load_surrogate,
+                             save_surrogate, train_from_db)
 
 __all__ = [
     # -- facade + protocol tier: the supported public surface ---------------
@@ -99,6 +102,9 @@ __all__ = [
     "TileProgram", "baseline_program", "inject", "program_speedup",
     "extract_sites", "extract_arch_sites",
     "TuningService", "SessionHandle",
+    # learned cost model + measurement pruning (PR 7)
+    "SurrogateModel", "SurrogateOracle", "train_from_db",
+    "save_surrogate", "load_surrogate", "resolve_surrogate",
     # artifact layer (PR 5): checkpoints + warm-start program store
     "ArtifactError", "save_agent", "load_agent", "agent_fingerprint",
     "ProgramStore", "program_key",
@@ -134,8 +140,20 @@ class NeuroVectorizer:
     ``"measured"``      a ``MeasureTransport``  timings through your
                                                 transport (borrowed — the
                                                 facade won't close it)
+    ``"surrogate"``     (must be unset)         the learned cost model
+                                                (``SurrogateOracle``) —
+                                                trained from ``db_path``
+                                                or loaded via
+                                                ``surrogate=``
     an ``Oracle``       (must be unset)         your oracle, verbatim
     ==================  ======================  ===========================
+
+    ``oracle="measured"`` additionally takes ``prune_topk=N`` +
+    optionally ``surrogate=`` (a trained ``SurrogateModel``, a checkpoint
+    dir, or ``None`` to train from the DB): the surrogate ranks each
+    site's legal grid and only the top-N candidates are ever timed, the
+    rest priced by the surrogate (``env.pruned_pairs`` counts the
+    savings).
 
     Parameters
     ----------
@@ -180,6 +198,8 @@ class NeuroVectorizer:
                  transport: Union[str, MeasureTransport, None] = None,
                  workers: Optional[int] = None,
                  program_store: Union[str, ProgramStore, None] = None,
+                 prune_topk: Optional[int] = None,
+                 surrogate: Union[str, SurrogateModel, None] = None,
                  **agent_kwargs):
         self.cfg = cfg
         self._owns_oracle = False
@@ -187,20 +207,40 @@ class NeuroVectorizer:
         if oracle == "measured":
             self.oracle: Oracle = make_measured_env(
                 cfg, db_path=db_path, seed=seed, transport=transport,
-                workers=workers, **(oracle_kwargs or {}))
+                workers=workers, prune_topk=prune_topk,
+                surrogate=surrogate, **(oracle_kwargs or {}))
             # a borrowed MeasureTransport instance is not ours to close
             self._owns_oracle = transport is None or isinstance(transport,
                                                                 str)
+        elif oracle == "surrogate":
+            if oracle_kwargs or transport is not None or workers is not None:
+                raise ValueError("oracle_kwargs/transport/workers "
+                                 "apply only to oracle='measured'")
+            if prune_topk is not None:
+                raise ValueError("prune_topk applies only to "
+                                 "oracle='measured' (a surrogate oracle "
+                                 "performs no measurements to prune)")
+            model = resolve_surrogate(surrogate, db=db_path)
+            if model is None:
+                raise ValueError(
+                    "oracle='surrogate' needs a trained model: pass "
+                    "surrogate= (a SurrogateModel or checkpoint dir) or "
+                    "db_path= pointing at a MeasureDB with enough finite "
+                    "records to train from")
+            self.oracle = SurrogateOracle(cfg, model, seed=seed)
         else:
             if db_path is not None or oracle_kwargs or \
                     transport is not None or workers is not None:
                 raise ValueError("db_path/oracle_kwargs/transport/workers "
                                  "apply only to oracle='measured'")
+            if prune_topk is not None or surrogate is not None:
+                raise ValueError("prune_topk/surrogate apply only to "
+                                 "oracle='measured' or oracle='surrogate'")
             if oracle is None or oracle == "model":
                 self.oracle = CostModelEnv(cfg, seed=seed)
             elif isinstance(oracle, str):
-                raise ValueError(f"unknown oracle {oracle!r}: "
-                                 f"expected 'model' or 'measured'")
+                raise ValueError(f"unknown oracle {oracle!r}: expected "
+                                 f"'model', 'measured', or 'surrogate'")
             else:
                 self.oracle = oracle
         self.agent: Agent = (make_agent(agent, cfg, seed=seed,
@@ -226,6 +266,12 @@ class NeuroVectorizer:
                           or transport is None else "custom"),
             "workers": workers, "db_path": db_path,
             "oracle_kwargs": dict(oracle_kwargs or {}), "seed": seed,
+            "prune_topk": prune_topk,
+            # a live SurrogateModel instance is not serializable; measured
+            # facades retrain from the DB on load, surrogate facades
+            # require an explicit surrogate= override
+            "surrogate": (surrogate if isinstance(surrogate, str)
+                          or surrogate is None else "custom"),
         }
 
     # -- training ----------------------------------------------------------
@@ -355,7 +401,10 @@ class NeuroVectorizer:
              transport: Union[str, MeasureTransport, None] = None,
              workers: Optional[int] = None, db_path: Optional[str] = None,
              program_store: Union[str, ProgramStore, None] = None,
-             seed: Optional[int] = None, **agent_kwargs
+             seed: Optional[int] = None,
+             prune_topk: Optional[int] = None,
+             surrogate: Union[str, SurrogateModel, None] = None,
+             **agent_kwargs
              ) -> "NeuroVectorizer":
         """Re-assemble a facade saved by :meth:`save` in a (possibly
         fresh) process: config + agent construction + verified state
@@ -386,6 +435,12 @@ class NeuroVectorizer:
                 "cannot be re-assembled automatically — pass oracle= to "
                 "load()")
         oracle = spec["oracle"] if oracle is None else oracle
+        # pre-PR-7 artifacts carry no pruning fields; a recorded live
+        # model ("custom") is not reloadable — measured facades retrain
+        # from the DB, a surrogate facade needs an explicit override
+        spec_sur = spec.get("surrogate")
+        if surrogate is None and spec_sur != "custom":
+            surrogate = spec_sur
         kw = {}
         if oracle == "measured":
             # the transport only matters once the resolved oracle needs
@@ -398,7 +453,19 @@ class NeuroVectorizer:
                                 else transport),
                   "workers": spec["workers"] if workers is None else workers,
                   "db_path": spec["db_path"] if db_path is None else db_path,
-                  "oracle_kwargs": spec["oracle_kwargs"] or None}
+                  "oracle_kwargs": spec["oracle_kwargs"] or None,
+                  "prune_topk": (spec.get("prune_topk")
+                                 if prune_topk is None else prune_topk),
+                  "surrogate": surrogate}
+        elif oracle == "surrogate":
+            if spec_sur == "custom" and surrogate is None:
+                raise ArtifactError(
+                    "this artifact was saved around a live SurrogateModel "
+                    "instance, which cannot be re-assembled automatically "
+                    "— pass surrogate= (a model or checkpoint dir) to "
+                    "load()")
+            kw = {"db_path": spec["db_path"] if db_path is None else db_path,
+                  "surrogate": surrogate}
         merged_kwargs = {**spec["agent_kwargs"], **agent_kwargs}
         nv = cls(cfg, agent=spec["agent"] if agent is None else agent,
                  oracle=oracle,

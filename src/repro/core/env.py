@@ -267,6 +267,17 @@ class MeasuredEnv(CostModelEnv):
     back to the analytic model, making this a drop-in
     :class:`CostModelEnv`.
 
+    **Grid pruning** (``prune_topk`` + ``surrogate``): with a trained
+    surrogate cost model attached, each site's legal tile grid is ranked
+    by predicted runtime once and only the top-k candidates (plus the
+    heuristic baseline tile, so eq. 2 stays measured-vs-measured) are
+    ever submitted to the measurement hook — everything else is priced
+    by the surrogate directly.  ``surrogate`` is duck-typed
+    (``predict_seconds(sites, tiles) -> (n,) seconds``; see
+    ``repro.surrogate``), keeping this module free of any model
+    dependency.  ``pruned_pairs`` counts pairs priced by the surrogate
+    instead of hardware.
+
     **Circuit breaker** (graceful degradation): when the measurement path
     collapses — the hook raises (dead transport), or
     ``breaker_threshold`` consecutive batches come back with *every* pair
@@ -284,12 +295,19 @@ class MeasuredEnv(CostModelEnv):
     can_degrade = True
 
     def __init__(self, nv_cfg: NeuroVecConfig, measure_fn=None,
-                 seed: int = 0, breaker_threshold: int = 2):
+                 seed: int = 0, breaker_threshold: int = 2,
+                 prune_topk: Optional[int] = None, surrogate=None):
         super().__init__(nv_cfg, seed=seed, vectorized=True)
         if breaker_threshold < 1:
             raise ValueError(
                 f"breaker_threshold must be >= 1, got {breaker_threshold}")
+        if prune_topk is not None and prune_topk < 1:
+            raise ValueError(
+                f"prune_topk must be >= 1, got {prune_topk}")
         self.measure_fn = measure_fn
+        self.prune_topk = prune_topk
+        self.surrogate = surrogate
+        self._allowed_cache: Dict[str, frozenset] = {}
         self.breaker_threshold = breaker_threshold
         self.breaker_open = False
         self.degraded_reason: Optional[str] = None
@@ -298,6 +316,7 @@ class MeasuredEnv(CostModelEnv):
                                  float] = {}
         self.measure_calls = 0          # hook invocations (for tests/ops)
         self.measured_pairs = 0         # (site, tile) pairs sent to hw
+        self.pruned_pairs = 0           # pairs priced by the surrogate
 
     def clear_result_cache(self) -> None:
         self._result_cache.clear()
@@ -323,6 +342,34 @@ class MeasuredEnv(CostModelEnv):
         self.degraded_reason = None
         self._consec_failed_batches = 0
 
+    # -- surrogate grid pruning ---------------------------------------------
+    @property
+    def prune_active(self) -> bool:
+        """Pruning needs all three legs: a budget, a trained surrogate,
+        and an actual measurement path to save work on."""
+        return (self.prune_topk is not None and self.surrogate is not None
+                and self.measure_fn is not None)
+
+    def _allowed_tiles(self, site) -> frozenset:
+        """The measurable tile set for ``site``: the surrogate's top-k of
+        the legal action grid plus the heuristic baseline tile (eq. 2
+        must stay measured-vs-measured).  Ranked once per site."""
+        key = site.key()
+        allowed = self._allowed_cache.get(key)
+        if allowed is None:
+            grid = costmodel_vec.action_tiles_grid(self.space, site.kind)
+            legal = np.flatnonzero(np.isfinite(
+                costmodel_vec.costs_for_tiles([site] * len(grid), grid)))
+            pred = np.asarray(self.surrogate.predict_seconds(
+                [site] * len(legal), grid[legal]), np.float64)
+            top = legal[np.argsort(pred, kind="stable")[:self.prune_topk]]
+            base = costmodel_vec.baseline_tiles_batch([site])[0]
+            allowed = frozenset(
+                [tuple(int(x) for x in grid[i]) for i in top]
+                + [tuple(int(x) for x in base)])
+            self._allowed_cache[key] = allowed
+        return allowed
+
     # -- the measured cost of explicit tiles --------------------------------
     def _measured_costs(self, sites, tiles) -> np.ndarray:
         """(n,) seconds per (site, tile) pair; ``inf`` = illegal/failed.
@@ -343,6 +390,20 @@ class MeasuredEnv(CostModelEnv):
             vals = costmodel_vec.costs_for_tiles(m_sites, m_tiles)
             if self.measure_fn is not None and not self.breaker_open:
                 legal = np.flatnonzero(np.isfinite(vals))
+                if len(legal) and self.prune_active:
+                    # surrogate grid pruning: only each site's top-k
+                    # candidates (plus its baseline tile) reach the
+                    # hardware; the rest are priced by the surrogate
+                    keep = np.array(
+                        [tuple(int(x) for x in m_tiles[j])
+                         in self._allowed_tiles(m_sites[j])
+                         for j in legal], bool)
+                    pruned = legal[~keep]
+                    if len(pruned):
+                        vals[pruned] = self.surrogate.predict_seconds(
+                            [m_sites[j] for j in pruned], m_tiles[pruned])
+                        self.pruned_pairs += len(pruned)
+                    legal = legal[keep]
                 if len(legal):
                     try:
                         raw = self.measure_fn(

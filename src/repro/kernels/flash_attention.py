@@ -17,7 +17,8 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, n_kv: int, bq: int, bkv: int):
+                  scale: float, causal: bool, n_kv: int, bq: int, bkv: int,
+                  q_off: int):
     kv_i = pl.program_id(2)
     q_i = pl.program_id(1)
 
@@ -34,7 +35,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         preferred_element_type=jnp.float32) * scale   # (bq, bkv)
 
     if causal:
-        q_pos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        # bottom-right aligned (matches ``ref.attention_ref``): query row i
+        # attends to keys 0..i + (Skv - Sq), so for Sq != Skv the final query
+        # still sees the full key sequence.
+        q_pos = (q_i * bq + q_off
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
         k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
         s = jnp.where(q_pos >= k_pos, s, NEG_INF)
 
@@ -75,7 +80,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          n_kv=grid[2], bq=bq, bkv=bkv),
+                          n_kv=grid[2], bq=bq, bkv=bkv, q_off=Skv - Sq),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),

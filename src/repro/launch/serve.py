@@ -78,6 +78,8 @@ def _tile_plan(args, model, params, batch, cache):
                              transport=args.transport,
                              workers=(args.workers
                                       if args.transport == "pool" else None),
+                             prune_topk=args.prune_topk,
+                             surrogate=args.surrogate,
                              oracle_kwargs=dict(reps=args.measure_reps))
         nv = api.NeuroVectorizer(agent=args.autotune,
                                  program_store=args.program_store,
@@ -112,6 +114,11 @@ def _tile_plan(args, model, params, batch, cache):
         print(f"[serve] measurements: {st['timed_pairs']} timed, "
               f"{st['hits']} DB hits, {st['coalesced']} coalesced "
               f"({t.backend_key})")
+        if args.prune_topk is not None:
+            state = "active" if env.prune_active else \
+                "inactive (DB too cold to train the surrogate)"
+            print(f"[serve] pruning top-{args.prune_topk}: {state}, "
+                  f"{env.pruned_pairs} pairs surrogate-priced")
         print(f"[serve] health: {nv.health()}")
     if nv is not None:
         nv.close()                      # release pool workers / DB handles
@@ -141,6 +148,14 @@ def main(argv=None):
                          "against the same path re-time nothing)")
     ap.add_argument("--measure-reps", type=int, default=3,
                     help="timing repetitions per (site, tile) pair")
+    ap.add_argument("--prune-topk", type=int, default=None,
+                    help="with --measured: only each site's top-K "
+                         "surrogate-ranked tile candidates are timed; the "
+                         "rest are priced by the learned cost model "
+                         "(repro.surrogate, trained from --measure-db)")
+    ap.add_argument("--surrogate", default=None,
+                    help="surrogate checkpoint directory for --prune-topk "
+                         "(default: train from the measurement DB)")
     ap.add_argument("--transport", choices=("inproc", "pool"),
                     default="inproc",
                     help="how measurements execute: this process, or a "
@@ -169,6 +184,12 @@ def main(argv=None):
                  "which loads a finished plan)")
     if args.measure_reps < 1:
         ap.error(f"--measure-reps must be >= 1, got {args.measure_reps}")
+    if args.prune_topk is not None and not args.measured:
+        ap.error("--prune-topk applies only to --measured tuning")
+    if args.prune_topk is not None and args.prune_topk < 1:
+        ap.error(f"--prune-topk must be >= 1, got {args.prune_topk}")
+    if args.surrogate and args.prune_topk is None:
+        ap.error("--surrogate applies only with --prune-topk")
     if args.workers < 1:
         ap.error(f"--workers must be >= 1, got {args.workers}")
     if args.measured:

@@ -51,6 +51,7 @@ TRANSPORT_NAMES = ("inproc", "pool")
 __all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
            "InProcessTransport", "WorkerPoolTransport", "TransportMeasureFn",
            "TRANSPORT_NAMES", "make_transport", "make_measured_env",
+           "resolve_surrogate",
            "default_interpret", "device_kind", "timing",
            "FaultInjectionTransport", "ChaosRunner", "FaultSchedule",
            "respawn_backoff"]
@@ -94,7 +95,9 @@ def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,
 def make_measured_env(cfg=None, db_path: Optional[str] = None,
                       runner: Optional[MeasureRunner] = None,
                       seed: int = 0, transport: Union[str, object, None] = None,
-                      workers: Optional[int] = None, **runner_kwargs):
+                      workers: Optional[int] = None,
+                      prune_topk: Optional[int] = None,
+                      surrogate=None, **runner_kwargs):
     """A :class:`~repro.core.env.MeasuredEnv` wired to a real measurement
     stack.
 
@@ -108,6 +111,15 @@ def make_measured_env(cfg=None, db_path: Optional[str] = None,
     assembled hook is reachable as ``env.measure_fn``
     (``.transport`` / ``.db`` for stats and lifecycle; ``.runner`` on the
     in-process path).
+
+    ``prune_topk=N`` enables surrogate grid pruning: only each site's
+    top-N predicted candidates (plus the baseline tile) are submitted to
+    the transport.  ``surrogate`` may be a trained
+    :class:`~repro.surrogate.model.SurrogateModel`, a checkpoint
+    directory path, or ``None`` — in which case one is trained from the
+    attached DB's existing records; a DB too cold to train (fewer than
+    ``repro.surrogate.model.train_from_db``'s ``min_pairs``) leaves
+    pruning inactive for this run.
     """
     from repro.configs.neurovec import DEFAULT
     from repro.core.env import MeasuredEnv
@@ -123,5 +135,23 @@ def make_measured_env(cfg=None, db_path: Optional[str] = None,
         t = transport
     fn = (CachedMeasureFn(t) if isinstance(t, InProcessTransport)
           else TransportMeasureFn(t))
+    if prune_topk is not None:
+        surrogate = resolve_surrogate(surrogate,
+                                      db=getattr(t, "db", None))
     return MeasuredEnv(cfg if cfg is not None else DEFAULT,
-                       measure_fn=fn, seed=seed)
+                       measure_fn=fn, seed=seed,
+                       prune_topk=prune_topk, surrogate=surrogate)
+
+
+def resolve_surrogate(surrogate, db=None):
+    """Normalize the facade/service ``surrogate=`` argument: a trained
+    model passes through, a string loads a checkpoint directory, and
+    ``None`` trains from ``db`` (``None`` again when the DB is too cold
+    — pruning simply stays inactive)."""
+    if surrogate is None:
+        from repro.surrogate.model import train_from_db
+        return train_from_db(db)
+    if isinstance(surrogate, str):
+        from repro.surrogate.model import load_surrogate
+        return load_surrogate(surrogate)
+    return surrogate

@@ -39,7 +39,7 @@ from __future__ import annotations
 import json
 import os
 from collections import OrderedDict
-from typing import Optional
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 
@@ -47,6 +47,14 @@ import numpy as np
 def make_key(site_key: str, tiles, backend: str) -> str:
     t = tuple(int(x) for x in tiles)
     return f"{site_key}|{t[0]}x{t[1]}x{t[2]}|{backend}"
+
+
+class MeasureRecord(NamedTuple):
+    """One resolved measurement from :meth:`MeasureDB.iter_records`."""
+    key: str            # full DB key: "site_key|t0xt1xt2|backend"
+    kind: str           # site kind parsed from the key ("matmul", ...)
+    value: float        # measured seconds; inf for failed measurements
+    fingerprint: str    # backend fingerprint component of the key
 
 
 class MeasureDB:
@@ -154,6 +162,49 @@ class MeasureDB:
     @property
     def n_quarantined(self) -> int:
         return len(self._quarantined)
+
+    # -- iteration -----------------------------------------------------------
+    def iter_records(self) -> Iterator[MeasureRecord]:
+        """Iterate every resolved measurement in the on-disk log.
+
+        Streams the file (so entries evicted from the in-memory LRU are
+        still seen), resolving duplicate keys last-wins exactly like
+        :meth:`_load`.  Quarantined and corrupt/unparseable entries are
+        skipped — this is the training-corpus surface for
+        ``repro.surrogate``, and poisoned or torn records are not data.
+        Keys that do not have the ``site|t0xt1xt2|backend`` shape are
+        skipped too (future record kinds stay non-fatal).
+        """
+        if self._fh is not None:
+            self._fh.flush()            # records put() after open
+        if not os.path.exists(self.path):
+            return
+        resolved: "OrderedDict[str, Optional[float]]" = OrderedDict()
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    key = rec["k"]
+                    val = float("inf") if rec["v"] is None else float(rec["v"])
+                except (ValueError, KeyError, TypeError):
+                    continue            # counted at load time; not data
+                if rec.get("kind") == "quarantine":
+                    resolved[key] = None        # poisoned: excluded
+                else:
+                    resolved[key] = val
+        for key, val in resolved.items():
+            if val is None:
+                continue
+            parts = key.split("|")
+            if len(parts) != 3:
+                continue
+            site_key, _, backend = parts
+            kind = site_key.split(":", 1)[0]
+            yield MeasureRecord(key=key, kind=kind, value=val,
+                                fingerprint=backend)
 
     def __len__(self) -> int:
         return len(self._mem)

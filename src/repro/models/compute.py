@@ -283,7 +283,8 @@ def _mea_fwd_impl(q, k, v, causal, scale, bq, bkv):
 
     def q_body(_, qi_idx):
         qi, iq = qi_idx                            # (B,H,bq,D)
-        q_pos = iq * bq + jnp.arange(bq)
+        # bottom-right aligned causal offset, matching ref/pallas kernels
+        q_pos = iq * bq + jnp.arange(bq) + (Skv - Sq)
 
         def kv_body(carry, kv_idx):
             m, l, acc = carry
@@ -346,7 +347,7 @@ def _mea_bwd(causal, scale, bq, bkv, res, do):
         def q_body(carry, q_idx):
             dkj, dvj = carry
             qi, doi, lsei, dlti, iq = q_idx
-            q_pos = iq * bq + jnp.arange(bq)
+            q_pos = iq * bq + jnp.arange(bq) + (Skv - Sq)
             s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj).astype(jnp.float32)
             s = s * scale
             if causal:

@@ -48,7 +48,9 @@ from repro.core.env import CostModelEnv, MeasuredEnv
 from repro.core.protocols import Agent, AsyncOracle, Oracle
 from repro.core.vectorizer import TileProgram
 from repro.ft.monitor import PreemptionHandler
-from repro.measure import TransportMeasureFn, make_transport
+from repro.measure import (TransportMeasureFn, make_transport,
+                           resolve_surrogate)
+from repro.surrogate import SurrogateOracle
 
 _COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
              "retries")
@@ -265,11 +267,21 @@ class TuningService:
                      seed: Optional[int] = None,
                      agent_ckpt: Optional[str] = None,
                      program_store: Union[str, ProgramStore, None] = None,
+                     prune_topk: Optional[int] = None,
+                     surrogate=None,
                      **agent_kwargs) -> SessionHandle:
         """A new session: ``agent`` (registry name or :class:`Agent`)
         paired with ``oracle`` — ``"measured"`` (reward = the shared
         transport's timings), ``"model"`` (the analytic
-        :class:`CostModelEnv`), or a pre-built :class:`Oracle`.
+        :class:`CostModelEnv`), ``"surrogate"`` (the learned cost model,
+        trained from the shared transport's DB unless ``surrogate=``
+        supplies a model/checkpoint dir), or a pre-built :class:`Oracle`.
+
+        ``oracle="measured"`` accepts ``prune_topk=N``: the surrogate
+        ranks each site's legal grid and only the top-N candidates are
+        submitted to the shared transport (trained from the transport's
+        DB when ``surrogate`` is ``None``; a DB too cold to train leaves
+        pruning inactive for the session).
 
         ``agent_ckpt`` warm-starts the session: the constructed agent's
         state is restored from a ``repro.artifacts`` checkpoint
@@ -281,15 +293,32 @@ class TuningService:
         cfg = self.cfg if cfg is None else cfg
         seed = self.seed if seed is None else seed
         if oracle == "measured":
+            if prune_topk is not None:
+                surrogate = resolve_surrogate(
+                    surrogate, db=getattr(self.transport, "db", None))
             env: Oracle = MeasuredEnv(
                 cfg, measure_fn=TransportMeasureFn(self.transport),
-                seed=seed)
+                seed=seed, prune_topk=prune_topk, surrogate=surrogate)
             async_oracle = AsyncOracle(env, self.transport)
+        elif oracle == "surrogate":
+            if prune_topk is not None:
+                raise ValueError("prune_topk applies only to "
+                                 "oracle='measured' (a surrogate oracle "
+                                 "performs no measurements to prune)")
+            model = resolve_surrogate(
+                surrogate, db=getattr(self.transport, "db", None))
+            if model is None:
+                raise ValueError(
+                    "oracle='surrogate' needs a trained model: pass "
+                    "surrogate= (a SurrogateModel or checkpoint dir) or "
+                    "give the service a DB with enough finite records")
+            async_oracle = AsyncOracle(SurrogateOracle(cfg, model,
+                                                       seed=seed))
         elif oracle == "model":
             async_oracle = AsyncOracle(CostModelEnv(cfg, seed=seed))
         elif isinstance(oracle, str):
-            raise ValueError(f"unknown oracle {oracle!r}: "
-                             f"expected 'model' or 'measured'")
+            raise ValueError(f"unknown oracle {oracle!r}: expected "
+                             f"'model', 'measured', or 'surrogate'")
         else:
             async_oracle = AsyncOracle(oracle)
         a = (make_agent(agent, cfg, seed=seed, **agent_kwargs)

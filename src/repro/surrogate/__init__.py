@@ -1,0 +1,41 @@
+"""Learned cost model trained from the persistent ``MeasureDB``.
+
+The paper's core conjecture is that a learned model "can better predict
+the actual performance cost" than a fixed-cost heuristic — and
+``BENCH_measure.json`` proves the gap for this repo: the analytic model's
+tile ranking barely correlates with measured time (mean Spearman ~0.19).
+Every timing ever taken is already persisted in the ``MeasureDB``, so the
+training corpus grows for free.  This package closes the loop:
+
+* :mod:`~repro.surrogate.features` — a fixed numeric featurizer over
+  ``(site, tiles)`` (shape/dtype/kind one-hots, tile triple, tile/dim
+  ratios, VMEM footprint, the analytic cost as a prior).  No code2vec
+  dependency, so it works on any measured site.
+* :mod:`~repro.surrogate.dataset` — corpus builder iterating finite
+  ``MeasureDB`` records (quarantine/corrupt entries skipped) into
+  ``(site, tiles) -> log-cost`` training pairs.
+* :mod:`~repro.surrogate.model` — a small jitted JAX MLP ensemble
+  (``optim/adamw``), checkpointed with the ``artifacts/agentio``
+  atomic-save + fingerprint discipline.
+* :mod:`~repro.surrogate.oracle` — :class:`SurrogateOracle`, the model
+  behind the full ``Oracle`` protocol; drops into every agent,
+  benchmark, and the shared conformance suite unchanged.
+
+The payoff layer is **grid pruning**: ``MeasuredEnv(prune_topk=N)`` lets
+the surrogate rank each site's full legal grid and submits only the
+top-k candidates to the measurement transport — everything else is
+priced by the surrogate.  Fewer timings per site beats any amount of
+worker-pool parallelism.
+"""
+from repro.surrogate.dataset import Corpus, build_corpus, parse_key
+from repro.surrogate.features import N_FEATURES, featurize
+from repro.surrogate.model import (SurrogateModel, load_surrogate,
+                                   save_surrogate, train_from_db,
+                                   train_surrogate)
+from repro.surrogate.oracle import SurrogateOracle
+
+__all__ = [
+    "Corpus", "N_FEATURES", "SurrogateModel", "SurrogateOracle",
+    "build_corpus", "featurize", "load_surrogate", "parse_key",
+    "save_surrogate", "train_from_db", "train_surrogate",
+]

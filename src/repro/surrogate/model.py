@@ -1,0 +1,234 @@
+"""The surrogate itself: a small jitted JAX MLP ensemble.
+
+Inputs are the fixed :mod:`~repro.surrogate.features` vectors, targets
+are log-seconds; both are z-normalized with statistics learned from the
+corpus and stored in the checkpoint.  An ensemble of independently
+initialized members (mean prediction) smooths the tiny-corpus variance
+that a single MLP fit exhibits — the corpus starts at a few dozen pairs
+on a fresh DB.  Training reuses :mod:`repro.optim.adamw` with its cosine
+schedule; one ``lax.scan`` per member keeps the whole fit a single
+compiled call.
+
+Checkpoints follow the ``artifacts/agentio`` discipline verbatim: the
+model exposes ``state_dict()`` (name + version + arrays) so
+:func:`save_surrogate` is ``agentio.save_agent`` — atomic staged-rename
+writes, manifest last, SHA-256 fingerprint recomputed and enforced on
+load.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.artifacts import agentio
+from repro.core import costmodel_vec
+from repro.core.protocols import AGENT_STATE_VERSION
+from repro.measure.db import MeasureDB
+from repro.optim import adamw
+from repro.surrogate.dataset import Corpus, build_corpus
+from repro.surrogate.features import N_FEATURES, featurize
+
+MODEL_NAME = "surrogate"
+
+
+def _init_member(key, n_in: int, hidden: Sequence[int]):
+    sizes = [n_in, *hidden, 1]
+    params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        scale = float(np.sqrt(2.0 / sizes[i]))
+        params.append({
+            "w": jax.random.normal(sub, (sizes[i], sizes[i + 1]),
+                                   jnp.float32) * scale,
+            "b": jnp.zeros((sizes[i + 1],), jnp.float32)})
+    return params
+
+
+def _forward(params, X):
+    h = X
+    for layer in params[:-1]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    return (h @ params[-1]["w"] + params[-1]["b"])[:, 0]
+
+
+@jax.jit
+def _forward_jit(params, X):
+    return _forward(params, X)
+
+
+def _train_member(params, X, y, steps: int, lr: float):
+    cfg = adamw.AdamWConfig(lr=lr, weight_decay=1e-4, clip_norm=1.0,
+                            warmup_steps=min(20, steps // 5),
+                            total_steps=steps, min_lr_frac=0.05)
+    opt = adamw.init(params)
+
+    def loss_fn(p):
+        return jnp.mean((_forward(p, X) - y) ** 2)
+
+    def step_fn(carry, _):
+        p, s = carry
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s, _ = adamw.update(cfg, grads, s, p)
+        return (p, s), loss
+
+    (params, _), losses = jax.lax.scan(step_fn, (params, opt), None,
+                                       length=steps)
+    return params, losses
+
+
+_train_member_jit = jax.jit(_train_member, static_argnames=("steps",))
+
+
+class SurrogateModel:
+    """Ensemble MLP mapping feature vectors to log-seconds."""
+
+    name = MODEL_NAME
+
+    def __init__(self, params, x_mean, x_std, y_mean: float, y_std: float,
+                 hidden: Tuple[int, ...], backend: str = "",
+                 n_features: int = N_FEATURES):
+        self.params = params            # [member][layer] {"w", "b"}
+        self.x_mean = np.asarray(x_mean, np.float64)
+        self.x_std = np.asarray(x_std, np.float64)
+        self.y_mean = float(y_mean)
+        self.y_std = float(y_std)
+        self.hidden = tuple(int(h) for h in hidden)
+        self.backend = str(backend)
+        self.n_features = int(n_features)
+
+    @property
+    def ensemble(self) -> int:
+        return len(self.params)
+
+    # -- inference -----------------------------------------------------------
+    def predict_log_seconds(self, X) -> np.ndarray:
+        """(n,) predicted log-seconds for raw (unnormalized) features."""
+        X = np.asarray(X, np.float64)
+        if X.ndim != 2 or X.shape[1] != self.n_features:
+            raise ValueError(f"features must be (n, {self.n_features}), "
+                             f"got {X.shape}")
+        if not len(X):
+            return np.zeros((0,), np.float64)
+        Xn = jnp.asarray((X - self.x_mean) / self.x_std, jnp.float32)
+        pred = np.mean([np.asarray(_forward_jit(p, Xn), np.float64)
+                        for p in self.params], axis=0)
+        return pred * self.y_std + self.y_mean
+
+    def predict_seconds(self, sites, tiles) -> np.ndarray:
+        """(n,) predicted seconds per pair; ``inf`` where the analytic
+        model rejects the tile (VMEM overflow — never predict a runtime
+        for a kernel that cannot build)."""
+        t = np.asarray(tiles, np.int64).reshape(len(sites), -1)
+        prior = costmodel_vec.costs_for_tiles(sites, t)
+        out = np.full(len(sites), np.inf, np.float64)
+        legal = np.flatnonzero(np.isfinite(prior))
+        if len(legal):
+            X = featurize([sites[i] for i in legal], t[legal])
+            out[legal] = np.exp(self.predict_log_seconds(X))
+        return out
+
+    # -- checkpoint surface (agentio) ----------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "version": AGENT_STATE_VERSION,
+            "backend": self.backend,
+            "hidden": list(self.hidden),
+            "n_features": self.n_features,
+            "x_mean": self.x_mean, "x_std": self.x_std,
+            "y_mean": self.y_mean, "y_std": self.y_std,
+            "params": [[{"w": np.asarray(l["w"]), "b": np.asarray(l["b"])}
+                        for l in member] for member in self.params],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "SurrogateModel":
+        if state.get("name") != MODEL_NAME:
+            raise agentio.ArtifactError(
+                f"not a surrogate checkpoint: name={state.get('name')!r}")
+        if state.get("version") != AGENT_STATE_VERSION:
+            raise agentio.ArtifactError(
+                f"surrogate schema version {state.get('version')!r} "
+                f"unsupported (expected {AGENT_STATE_VERSION})")
+        params = [[{"w": jnp.asarray(l["w"]), "b": jnp.asarray(l["b"])}
+                   for l in member] for member in state["params"]]
+        return cls(params, state["x_mean"], state["x_std"],
+                   state["y_mean"], state["y_std"],
+                   hidden=tuple(state["hidden"]), backend=state["backend"],
+                   n_features=int(state["n_features"]))
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def train_surrogate(corpus: Corpus, *, hidden: Tuple[int, ...] = (64, 64),
+                    ensemble: int = 4, steps: int = 500, lr: float = 1e-2,
+                    seed: int = 0, backend: str = "") -> SurrogateModel:
+    """Fit the ensemble on a :class:`~repro.surrogate.dataset.Corpus`."""
+    if not len(corpus.y):
+        raise ValueError("cannot train a surrogate on an empty corpus")
+    X = featurize(corpus.sites, corpus.tiles)
+    x_mean = X.mean(axis=0)
+    x_std = np.where(X.std(axis=0) < 1e-8, 1.0, X.std(axis=0))
+    y_mean = float(corpus.y.mean())
+    y_std = float(corpus.y.std()) or 1.0
+    Xn = jnp.asarray((X - x_mean) / x_std, jnp.float32)
+    yn = jnp.asarray((corpus.y - y_mean) / y_std, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for _ in range(ensemble):
+        key, sub = jax.random.split(key)
+        member = _init_member(sub, X.shape[1], hidden)
+        member, _ = _train_member_jit(member, Xn, yn, steps, lr)
+        params.append(jax.tree.map(np.asarray, member))
+    return SurrogateModel(params, x_mean, x_std, y_mean, y_std,
+                          hidden=hidden, backend=backend)
+
+
+def train_from_db(db: Union[MeasureDB, str, None], *, min_pairs: int = 8,
+                  backend: Optional[str] = None,
+                  **train_kwargs) -> Optional[SurrogateModel]:
+    """Train from whatever the DB holds; ``None`` when there is not yet
+    enough data (``min_pairs`` finite records) — callers treat that as
+    "pruning not active yet", the right behaviour for a cold DB.
+
+    With ``backend=None`` the corpus is restricted to the most common
+    measurement fingerprint in the DB: mixing fingerprints would train
+    on incommensurable clocks.
+    """
+    if db is None:
+        return None
+    corpus = build_corpus(db, backend=backend)
+    if backend is None and corpus.backends:
+        backend = Counter(corpus.backends).most_common(1)[0][0]
+        keep = [i for i, b in enumerate(corpus.backends) if b == backend]
+        corpus = Corpus(
+            sites=tuple(corpus.sites[i] for i in keep),
+            tiles=corpus.tiles[keep], y=corpus.y[keep],
+            backends=tuple(corpus.backends[i] for i in keep))
+    if len(corpus.y) < min_pairs:
+        return None
+    return train_surrogate(corpus, backend=backend or "", **train_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# checkpoints (agentio atomic-save + fingerprint discipline)
+# ---------------------------------------------------------------------------
+
+
+def save_surrogate(model: SurrogateModel, directory: str) -> str:
+    """Atomic artifact write; returns the manifest fingerprint."""
+    return agentio.save_agent(model, directory)
+
+
+def load_surrogate(directory: str) -> SurrogateModel:
+    """Load + fingerprint-verify a checkpoint (raises ``ArtifactError``
+    on corruption or a non-surrogate artifact)."""
+    state, _ = agentio.read_agent_state(directory)
+    return SurrogateModel.from_state(state)

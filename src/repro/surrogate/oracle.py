@@ -1,0 +1,104 @@
+"""``SurrogateOracle`` — the learned cost model behind the Oracle protocol.
+
+Structurally a :class:`~repro.core.env.CostModelEnv` whose cost source is
+the trained :class:`~repro.surrogate.model.SurrogateModel` instead of the
+analytic formulas: the same batched surface (``costs_batch`` /
+``baseline_costs`` / ``rewards_batch`` / ``speedups_batch`` /
+``cost_grid`` / ``tiles_costs``), the same ``inf`` = illegal masking, the
+same eq. 2 reward routing — so every agent, benchmark, and the shared
+conformance suite in ``tests/test_api.py`` run against it unchanged.
+
+Mirrors :class:`~repro.core.env.MeasuredEnv`'s shape without the
+measurement machinery: tiles the analytic model rejects (VMEM overflow)
+are never priced by the network — a kernel that cannot build has no
+runtime to predict — and per-key results are cached so repeated sweeps
+re-run no inference.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core import costmodel_vec
+from repro.core.env import CostModelEnv
+from repro.models.compute import KernelSite
+from repro.surrogate.model import SurrogateModel
+
+
+class SurrogateOracle(CostModelEnv):
+    """Oracle pricing every query with the learned surrogate."""
+
+    def __init__(self, nv_cfg: NeuroVecConfig, model: SurrogateModel,
+                 seed: int = 0):
+        super().__init__(nv_cfg, seed=seed, vectorized=True)
+        self.model = model
+        self._result_cache: Dict[Tuple[str, Tuple[int, int, int]],
+                                 float] = {}
+
+    def clear_result_cache(self) -> None:
+        self._result_cache.clear()
+
+    # -- the surrogate cost of explicit tiles --------------------------------
+    def _surrogate_costs(self, sites, tiles) -> np.ndarray:
+        """(n,) predicted seconds; ``inf`` = model-illegal tile."""
+        tiles = np.asarray(tiles, np.int64)
+        keys = [(s.key(), (int(t[0]), int(t[1]), int(t[2])))
+                for s, t in zip(sites, tiles)]
+        first = {}
+        for i, k in enumerate(keys):
+            if k not in self._result_cache and k not in first:
+                first[k] = i
+        miss = list(first.values())
+        if miss:
+            vals = self.model.predict_seconds(
+                [sites[i] for i in miss], tiles[miss])
+            for i, v in zip(miss, vals):
+                self._result_cache[keys[i]] = float(v)
+        return np.array([self._result_cache[k] for k in keys], np.float64)
+
+    # -- Oracle surface (surrogate-priced) -----------------------------------
+    def costs_batch(self, sites, actions) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        tiles = costmodel_vec.tiles_for_actions(self.space, sites, actions)
+        return self._surrogate_costs(sites, tiles)
+
+    def baseline_costs(self, sites) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        return self._surrogate_costs(
+            sites, costmodel_vec.baseline_tiles_batch(sites))
+
+    def baseline_cost(self, site: KernelSite) -> float:
+        return float(self.baseline_costs([site])[0])
+
+    def cost(self, site: KernelSite,
+             action: Sequence[int]) -> Optional[float]:
+        c = float(self.costs_batch([site], np.asarray([action]))[0])
+        return None if math.isinf(c) else c
+
+    def tiles_costs(self, sites, tiles) -> np.ndarray:
+        if not len(sites):
+            return np.zeros((0,), np.float64)
+        t = np.asarray(tiles, np.int64)
+        if t.ndim != 2 or t.shape[0] != len(sites):
+            raise ValueError(f"tiles must be (n_sites, k), got {t.shape}")
+        if t.shape[1] < 3:
+            t = np.concatenate(
+                [t, np.ones((len(t), 3 - t.shape[1]), np.int64)], 1)
+        return self._surrogate_costs(sites, t)
+
+    def cost_grid(self, sites) -> np.ndarray:
+        groups = costmodel_vec.group_by_kind(sites)
+        a_max = max((self.space.n_actions(k) for k in groups), default=0)
+        out = np.full((len(sites), a_max), np.inf, np.float64)
+        for kind, idx in groups.items():
+            tg = costmodel_vec.action_tiles_grid(self.space, kind)
+            rep_sites = [sites[i] for i in idx for _ in range(len(tg))]
+            rep_tiles = np.tile(tg, (len(idx), 1))
+            out[idx, :len(tg)] = self._surrogate_costs(
+                rep_sites, rep_tiles).reshape(len(idx), len(tg))
+        return out

@@ -106,10 +106,29 @@ def test_polly_vectorized_matches_scalar_walk():
 # Oracle protocol: CostModelEnv and MeasuredEnv are interchangeable
 # ---------------------------------------------------------------------------
 
-def test_oracle_protocol_conformance():
+def test_oracle_protocol_conformance(tmp_path):
     assert isinstance(ENV, Oracle)
     assert isinstance(MeasuredEnv(NV), Oracle)
     assert not isinstance(object(), Oracle)
+    # the learned cost model joins the same contract (PR 7)
+    from repro.core.costmodel_vec import tiles_for_actions
+    from repro.measure import MeasureDB, make_key
+    from repro.surrogate import SurrogateOracle, train_from_db
+    db = MeasureDB(str(tmp_path / "m.jsonl"))
+    for s in CORPUS[:4]:
+        for i, t in enumerate(tiles_for_actions(
+                ENV.space, [s] * 2, np.array([[0, 0, 0], [1, 0, 0]]))):
+            db.put(make_key(s.key(), tuple(int(x) for x in t), "t"),
+                   1e-3 * (i + 1))
+    db.close()
+    model = train_from_db(str(tmp_path / "m.jsonl"),
+                          hidden=(16,), ensemble=2, steps=30)
+    orc = SurrogateOracle(NV, model)
+    assert isinstance(orc, Oracle)
+    sites = CORPUS[:4]
+    acts = make_agent("baseline", NV).fit([], ENV).act(sites)
+    sp = orc.speedups_batch(sites, acts)
+    assert sp.shape == (len(sites),) and np.isfinite(sp).all()
 
 
 def test_measured_env_cost_model_fallback():

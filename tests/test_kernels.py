@@ -172,9 +172,12 @@ def test_matmul_action_space_sweep(tiles):
     assert _rel_err(y, ref.matmul_ref(x, w)) < 1e-5
 
 
-# Sq == Skv: the causal semantics the kernel and the oracle share (all
-# causal Pallas sites are self-attention; Sq==1 decode never hits Pallas)
-_ATTN_SQ, _ATTN_SKV, _ATTN_D = 256, 256, 64
+# Rectangular Sq != Skv: kernel, XLA path, and ref all share bottom-right
+# aligned causal semantics (query row i sees keys 0..i + Skv - Sq), so the
+# sweep covers cross-attention shapes too.  Skv >= Sq: under bottom-right
+# alignment a query block with Sq > Skv would attend to nothing, which the
+# ref softmax maps to NaN — not a shape the model layer ever emits.
+_ATTN_SQ, _ATTN_SKV, _ATTN_D = 128, 256, 64
 
 
 def _attn_sweep():
@@ -221,12 +224,13 @@ def test_chunk_scan_action_space_sweep(chunk):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("causal", [True, False])
-def test_mem_efficient_attention_grads(causal):
+@pytest.mark.parametrize("sq,skv", [(128, 128), (64, 128)])
+def test_mem_efficient_attention_grads(causal, sq, skv):
     from repro.models import compute
     key = jax.random.PRNGKey(0)
-    q = jax.random.normal(key, (2, 4, 128, 32))
-    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 128, 32))
-    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 128, 32))
+    q = jax.random.normal(key, (2, 4, sq, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, skv, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, skv, 32))
 
     def fn(q, k, v):
         return compute.flash_attention(q, k, v, site="t", causal=causal,

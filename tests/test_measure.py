@@ -134,6 +134,37 @@ def test_db_torn_trailing_line_recovery(tmp_path):
     assert len(db2) == 3                 # merged into the new record
 
 
+def test_db_iter_records_skips_quarantine_and_corruption(tmp_path):
+    """``iter_records`` is the surrogate training corpus: finite and
+    failed measurements come through (last-wins), quarantined keys and
+    corrupt lines never do, and the LRU bound does not hide disk rows."""
+    p = str(tmp_path / "m.jsonl")
+    kmm = make_key(MM.key(), (16, 128, 128), "spy-backend")
+    kat = make_key(ATTN.key(), (64, 128, 1), "spy-backend")
+    with open(p, "w") as f:
+        f.write(json.dumps({"k": kmm, "v": 1.0}) + "\n")
+        f.write("not json at all\n")                    # corrupt: skipped
+        f.write(json.dumps({"k": "malformed-key", "v": 2.0}) + "\n")
+        f.write(json.dumps({"k": kat, "v": None}) + "\n")
+        f.write(json.dumps({"k": kmm, "v": 4.0}) + "\n")  # last-wins
+    db = MeasureDB(p, max_entries=1)      # LRU must not limit iteration
+    db.quarantine(make_key(SCAN.key(), (32, 1, 1), "spy-backend"),
+                  attempts=2, reason="wedged")
+    db.put(make_key(MM.key(), (8, 128, 128), "spy-backend"), 5.0)
+
+    recs = {r.key: r for r in db.iter_records()}
+    assert kmm in recs and recs[kmm].value == 4.0       # last-wins
+    assert recs[kmm].kind == "matmul"
+    assert recs[kmm].fingerprint == "spy-backend"
+    assert recs[kat].value == float("inf")              # null -> inf
+    assert recs[kat].kind == "attention"
+    assert "malformed-key" not in recs                  # no 3-part shape
+    assert not any("chunk_scan:t.scan" in k for k in recs)  # quarantined
+    assert len(recs) == 3                # kmm, kat, and the post-open put
+    db.close()
+    assert {r.key for r in MeasureDB(p).iter_records()} == set(recs)
+
+
 def test_db_quarantine_roundtrip_and_lru_survival(tmp_path):
     p = str(tmp_path / "m.jsonl")
     db = MeasureDB(p, max_entries=1)
