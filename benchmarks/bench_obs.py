@@ -1,0 +1,145 @@
+"""Benchmark of the observability substrate (``repro.obs``).
+
+Instrumentation only earns its keep if it is effectively free on the
+tuning hot path.  This benchmark measures both ends and writes
+``BENCH_obs.json``:
+
+* ``micro`` — nanoseconds per primitive operation: unlabelled/labelled
+  counter increments, histogram observes, real spans written to a JSONL
+  trace, and the :data:`~repro.obs.NULL_TRACER` no-op span (what every
+  un-traced call pays).
+* ``overhead`` — the headline number: median ``SessionHandle.tune()``
+  wall-clock through a :class:`~repro.service.TuningService`, fully
+  instrumented (metrics registry *and* file tracing on) vs observability
+  disabled, interleaved A/B to cancel background-load drift.  The
+  acceptance bar for the PR is ``tune_overhead_frac < 0.03``.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_obs`` (env
+``BENCH_FAST=1`` trims reps and micro-op counts;
+``BENCH_OBS_OUT`` overrides the output path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from repro.api import NeuroVecConfig, TuningService
+from repro.measure.timing import interleaved_medians
+from repro.models.compute import KernelSite
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer, read_trace
+
+FAST = os.environ.get("BENCH_FAST") == "1"
+OUT = os.environ.get("BENCH_OBS_OUT", "BENCH_obs.json")
+REPS = 10 if FAST else 40
+MICRO_N = 20_000 if FAST else 200_000
+
+# a mid-sized action grid: big enough that brute tune() does real work
+# per call (the overhead denominator), small enough to stay sub-second
+CFG = NeuroVecConfig(
+    bm_choices=(8, 16, 32, 64), bn_choices=(128, 256),
+    bk_choices=(128, 256), bq_choices=(64, 128, 256),
+    bkv_choices=(128, 256), chunk_choices=(64, 128),
+    train_batch=32, sgd_minibatch=16, ppo_epochs=2)
+
+
+def _sites():
+    mm = [KernelSite(site=f"b.mm{i}", kind="matmul",
+                     m=32 * (i + 1), n=128, k=128) for i in range(512)]
+    at = [KernelSite(site=f"b.attn{i}", kind="attention",
+                     m=64 * (i + 1), n=32, k=64, batch=2, causal=True)
+          for i in range(128)]
+    return mm + at
+
+
+def _per_op_ns(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e9
+
+
+def micro(tmp: str) -> dict:
+    reg = MetricsRegistry()
+    c = reg.counter("bench_ops_total")
+    h = reg.histogram("bench_op_seconds")
+    lbl = reg.counter("bench_lops_total", labelnames=("s",)).labels(s="x")
+    out = {
+        "counter_inc_ns": _per_op_ns(c.inc, MICRO_N),
+        "histogram_observe_ns": _per_op_ns(lambda: h.observe(0.01),
+                                           MICRO_N),
+        "labelled_inc_ns": _per_op_ns(lbl.inc, MICRO_N),
+        "null_span_ns": _per_op_ns(
+            lambda: NULL_TRACER.span("x").end(), MICRO_N),
+    }
+    trace_path = os.path.join(tmp, "micro.jsonl")
+    tr = Tracer(trace_path)
+    n_spans = max(MICRO_N // 20, 1000)
+    out["traced_span_us"] = _per_op_ns(
+        lambda: tr.span("bench").end(), n_spans) / 1e3
+    tr.close()
+    assert len(read_trace(trace_path)) == n_spans
+    return out
+
+
+def overhead(tmp: str) -> dict:
+    sites = _sites()
+    trace_path = os.path.join(tmp, "tune.jsonl")
+
+    svc_plain = TuningService(CFG, transport="inproc", metrics=False)
+    s_plain = svc_plain.open_session(agent="brute", oracle="model")
+    svc_obs = TuningService(CFG, transport="inproc",
+                            metrics=MetricsRegistry(), trace=trace_path)
+    s_obs = svc_obs.open_session(agent="brute", oracle="model")
+    try:
+        s_plain.fit(sites)
+        s_obs.fit(sites)
+        prog_p = s_plain.tune(sites)                    # warm both paths
+        prog_o = s_obs.tune(sites)
+        assert prog_p.tiles == prog_o.tiles, \
+            "instrumentation changed the tuned program"
+        t_plain, t_obs = interleaved_medians(
+            lambda: s_plain.tune(sites),
+            lambda: s_obs.tune(sites), reps=REPS)
+        n_series = len(svc_obs.registry.snapshot())
+    finally:
+        svc_plain.close()
+        svc_obs.close()
+    return {
+        "tune_plain_s": t_plain,
+        "tune_obs_s": t_obs,
+        "tune_overhead_frac": t_obs / t_plain - 1.0,
+        "reps": REPS,
+        "n_sites": len(sites),
+        "metric_series": n_series,
+        "trace_spans": len(read_trace(trace_path)),
+    }
+
+
+def run() -> dict:
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    results = {
+        "config": {"fast": FAST, "reps": REPS, "micro_n": MICRO_N},
+        "micro": micro(tmp),
+        "overhead": overhead(tmp),
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    m, o = results["micro"], results["overhead"]
+    print(f"bench_obs,counter_inc_ns,{m['counter_inc_ns']:.0f}")
+    print(f"bench_obs,histogram_observe_ns,{m['histogram_observe_ns']:.0f}")
+    print(f"bench_obs,labelled_inc_ns,{m['labelled_inc_ns']:.0f}")
+    print(f"bench_obs,null_span_ns,{m['null_span_ns']:.0f}")
+    print(f"bench_obs,traced_span_us,{m['traced_span_us']:.1f}")
+    print(f"bench_obs,tune_overhead_pct,{100 * o['tune_overhead_frac']:.2f} "
+          f"({o['tune_obs_s'] * 1e3:.2f}ms vs {o['tune_plain_s'] * 1e3:.2f}ms"
+          f" plain)")
+    print(f"bench_obs,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -37,6 +37,13 @@ def main(argv=None):
                          "tile candidates per session; the rest are priced "
                          "by a learned cost model trained from --db "
                          "(needs a warm DB — run once without it first)")
+    ap.add_argument("--trace-out", default=None,
+                    help="append the session span tree (session -> fit -> "
+                         "tune -> submit/drain) to this JSONL trace file "
+                         "(repro.obs)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the service's final metrics snapshot to "
+                         "this JSON file")
     ap.add_argument("--chaos", action="store_true",
                     help="after the normal run, hard-kill the transport "
                          "and prove tuning degrades to the cost model "
@@ -54,7 +61,8 @@ def main(argv=None):
     sites = demo_sites()
 
     with TuningService(cfg, transport="pool", workers=args.workers,
-                       db_path=args.db, reps=args.reps, warmup=1) as svc:
+                       db_path=args.db, reps=args.reps, warmup=1,
+                       trace=args.trace_out) as svc:
         print(f"== TuningService: pool of {args.workers} workers "
               f"({svc.transport.backend_key}) ==")
         rl = svc.open_session(agent="ppo", oracle="measured",
@@ -99,6 +107,16 @@ def main(argv=None):
                   f"(modelled speedup {sp:.2f}x, breaker_open="
                   f"{env.breaker_open})")
 
+        snap = svc.registry.snapshot()
+        n_tunes = sum(v for k, v in snap.items()
+                      if k.startswith("session_tunes_total"))
+        print(f"obs: {len(snap)} metric series, "
+              f"{int(n_tunes)} tunes recorded"
+              + (f", trace -> {args.trace_out}" if args.trace_out else ""))
+        if args.metrics_out:
+            import json
+            with open(args.metrics_out, "w") as f:
+                json.dump(snap, f, indent=1, default=str)
         st = svc.transport.stats()
     print(f"measurements: {st['timed_pairs']} timed, {st['hits']} DB hits, "
           f"{st['coalesced']} coalesced, {st['retries']} retries "

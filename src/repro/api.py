@@ -87,6 +87,11 @@ from repro.measure import (TRANSPORT_NAMES, CachedMeasureFn,
                            TransportMeasureFn, WorkerPoolTransport,
                            make_measured_env, make_transport,
                            resolve_surrogate)
+from repro.obs import MetricsRegistry, ObsHandle, Tracer, get_registry
+from repro.obs import resolve_obs as _resolve_obs
+from repro.obs import to_chrome_trace
+from repro.obs.instrument import (instrument_oracle_stack,
+                                  instrument_program_store)
 from repro.service import SessionHandle, TuningService
 from repro.surrogate import (SurrogateModel, SurrogateOracle, load_surrogate,
                              save_surrogate, train_from_db)
@@ -108,6 +113,8 @@ __all__ = [
     # artifact layer (PR 5): checkpoints + warm-start program store
     "ArtifactError", "save_agent", "load_agent", "agent_fingerprint",
     "ProgramStore", "program_key",
+    # observability substrate (PR 8): metrics registry + span tracing
+    "MetricsRegistry", "get_registry", "Tracer", "to_chrome_trace",
     # NOTE: the legacy deep-import tier (concrete agent classes
     # PPOAgent/BruteForceAgent/..., brute_force_* helpers,
     # MeasureRunner/MeasureDB/CachedMeasureFn/InProcessTransport/
@@ -200,10 +207,18 @@ class NeuroVectorizer:
                  program_store: Union[str, ProgramStore, None] = None,
                  prune_topk: Optional[int] = None,
                  surrogate: Union[str, SurrogateModel, None] = None,
+                 metrics: Union[MetricsRegistry, bool, None] = None,
+                 trace: Union[str, Tracer, None] = None,
                  **agent_kwargs):
         self.cfg = cfg
         self._owns_oracle = False
         self._closed = False
+        # obs substrate (PR 8): metrics default to the shared process-wide
+        # registry (metrics=False disables); tracing is off unless trace=
+        # names a JSONL path (owned — closed with the facade) or passes a
+        # repro.obs.Tracer (borrowed)
+        self.registry, self.tracer, self._owns_tracer = \
+            _resolve_obs(metrics, trace)
         if oracle == "measured":
             self.oracle: Oracle = make_measured_env(
                 cfg, db_path=db_path, seed=seed, transport=transport,
@@ -273,6 +288,21 @@ class NeuroVectorizer:
             "surrogate": (surrogate if isinstance(surrogate, str)
                           or surrogate is None else "custom"),
         }
+        # wire the oracle stack (env counters, breaker gauge, transport,
+        # DB, surrogate) and the program store into the registry, and open
+        # the facade's root span — ended by close()
+        self._obs = ObsHandle(self.registry)
+        self._obs.adopt(instrument_oracle_stack(self.oracle, self.registry,
+                                                self.tracer))
+        self._obs.adopt(instrument_program_store(self.program_store,
+                                                 self.registry))
+        self._m_fit_s = self.registry.histogram(
+            "facade_fit_seconds", "NeuroVectorizer.fit() latency")
+        self._m_tune_s = self.registry.histogram(
+            "facade_tune_seconds", "NeuroVectorizer.tune_sites() latency")
+        self._span = self.tracer.begin("session", detached=True,
+                                       kind="facade",
+                                       agent=self.agent.name)
 
     # -- training ----------------------------------------------------------
     def fit(self, corpus_sites: Sequence, **fit_kwargs) -> "NeuroVectorizer":
@@ -281,7 +311,12 @@ class NeuroVectorizer:
         to the agent (e.g. ``total_steps=`` for ppo, ``labels=`` for
         nns/dtree)."""
         self._check_open("fit")
-        self.agent.fit(corpus_sites, self.oracle, **fit_kwargs)
+        corpus_sites = list(corpus_sites)
+        t0 = time.monotonic()
+        with self.tracer.span("fit", parent=self._span,
+                              n_sites=len(corpus_sites)):
+            self.agent.fit(corpus_sites, self.oracle, **fit_kwargs)
+        self._m_fit_s.observe(time.monotonic() - t0)
         return self
 
     # -- tuning ------------------------------------------------------------
@@ -293,8 +328,14 @@ class NeuroVectorizer:
     def tune_sites(self, sites: Sequence) -> TileProgram:
         self._check_open("tune")
         sites = list(sites)
-        prog, hit = tune_through_store(sites, self.agent, self.oracle.space,
-                                       self.oracle, self.program_store)
+        t0 = time.monotonic()
+        with self.tracer.span("tune", parent=self._span,
+                              n_sites=len(sites)) as sp:
+            prog, hit = tune_through_store(sites, self.agent,
+                                           self.oracle.space,
+                                           self.oracle, self.program_store)
+            sp.set(store_hit=bool(hit))
+        self._m_tune_s.observe(time.monotonic() - t0)
         if self.program_store is not None and sites:
             if hit:
                 self.store_hits += 1
@@ -496,10 +537,14 @@ class NeuroVectorizer:
         if self._closed:
             return
         self._closed = True
+        self._span.end()
         if self._owns_oracle:
             self.oracle.measure_fn.transport.close()
         if self._owns_store and self.program_store is not None:
             self.program_store.close()
+        self._obs.close()
+        if self._owns_tracer:
+            self.tracer.close()
 
     def __enter__(self) -> "NeuroVectorizer":
         return self

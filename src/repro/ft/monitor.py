@@ -20,8 +20,17 @@ from typing import List, Optional, Tuple
 
 
 class StepMonitor:
+    """Per-step wall-time EMA with z-score straggler flags.
+
+    Flags still accumulate in :attr:`events` (the in-process forensic
+    record), and — when ``metrics=``/``tracer=`` wire it into the
+    ``repro.obs`` substrate — each flag also increments the
+    ``straggler_flags_total`` counter and lands in the shared trace file
+    as a ``straggler`` instant event, right next to the tune spans it
+    stretched."""
+
     def __init__(self, alpha: float = 0.1, z_thresh: float = 3.0,
-                 warmup: int = 5):
+                 warmup: int = 5, metrics=None, tracer=None):
         self.alpha = alpha
         self.z = z_thresh
         self.warmup = warmup
@@ -30,6 +39,12 @@ class StepMonitor:
         self.n = 0
         self.events: List[dict] = []
         self._t0: Optional[float] = None
+        self._counter = None
+        if metrics is not None:
+            self._counter = metrics.counter(
+                "straggler_flags_total",
+                "steps flagged as stragglers by StepMonitor")
+        self._tracer = tracer
 
     def start(self):
         self._t0 = time.monotonic()
@@ -48,6 +63,11 @@ class StepMonitor:
             ev = {"step": step, "dt": dt, "mean": self.mean, "z": z,
                   "kind": "straggler"}
             self.events.append(ev)
+            if self._counter is not None:
+                self._counter.inc()
+            if self._tracer is not None:
+                self._tracer.event("straggler", step=step, dt=dt,
+                                   mean=self.mean, z=z)
         d = dt - self.mean
         self.mean += self.alpha * d
         self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)

@@ -83,6 +83,7 @@ def _tile_plan(args, model, params, batch, cache):
                              oracle_kwargs=dict(reps=args.measure_reps))
         nv = api.NeuroVectorizer(agent=args.autotune,
                                  program_store=args.program_store,
+                                 trace=args.trace_out,
                                  **oracle_kw)
         if args.agent_ckpt:
             # warm start: the checkpointed policy replaces the fit
@@ -122,6 +123,10 @@ def _tile_plan(args, model, params, batch, cache):
         print(f"[serve] health: {nv.health()}")
     if nv is not None:
         nv.close()                      # release pool workers / DB handles
+        if args.trace_out:
+            print(f"[serve] trace: {nv.tracer.n_spans} spans + "
+                  f"{nv.tracer.n_events} events -> {args.trace_out} "
+                  f"(chrome://tracing via repro.obs.to_chrome_trace)")
     return prog
 
 
@@ -171,6 +176,16 @@ def main(argv=None):
                          "inferences)")
     ap.add_argument("--inject", action="store_true",
                     help="run decode through the tuned Pallas kernels")
+    ap.add_argument("--trace-out", default=None,
+                    help="append the tuning span tree (session -> fit -> "
+                         "tune -> submit/drain) to this JSONL trace file "
+                         "(repro.obs; convert with to_chrome_trace)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final repro.obs metrics snapshot to "
+                         "this JSON file")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the live metrics registry in Prometheus "
+                         "text format on this HTTP port (0 = ephemeral)")
     args = ap.parse_args(argv)
     if args.inject and not (args.autotune or args.tiles):
         ap.error("--inject requires a tile plan: pass --autotune or --tiles")
@@ -192,11 +207,24 @@ def main(argv=None):
         ap.error("--surrogate applies only with --prune-topk")
     if args.workers < 1:
         ap.error(f"--workers must be >= 1, got {args.workers}")
+    if args.trace_out and not args.autotune:
+        ap.error("--trace-out records the tuning span tree: pass "
+                 "--autotune (loading --tiles produces no spans)")
+    if args.metrics_port is not None and not 0 <= args.metrics_port < 65536:
+        ap.error(f"--metrics-port must be in [0, 65536), got "
+                 f"{args.metrics_port}")
     if args.measured:
         workers = args.workers if args.transport == "pool" else "-"
         print(f"[serve] measured oracle: transport={args.transport} "
               f"workers={workers} reps={args.measure_reps} "
               f"db={args.measure_db or '-'}")
+
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        metrics_srv = MetricsServer(port=args.metrics_port).start()
+        print(f"[serve] metrics: http://127.0.0.1:{metrics_srv.port}"
+              f"/metrics (Prometheus text format)")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -247,6 +275,15 @@ def main(argv=None):
     print(f"[serve] {B} requests, {args.gen} tokens each in {dt:.2f}s "
           f"({B * args.gen / dt:.1f} tok/s)")
     print("[serve] sample:", seq[0].tolist())
+    if args.metrics_out:
+        import json as _json
+
+        from repro.obs import get_registry
+        with open(args.metrics_out, "w") as f:
+            _json.dump(get_registry().snapshot(), f, indent=1, default=str)
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
+    if metrics_srv is not None:
+        metrics_srv.close()
     return seq
 
 

@@ -90,7 +90,8 @@ def _read_frame_deadline(stream, deadline: Optional[float]):
 
 
 class _Job:
-    __slots__ = ("key", "site", "tiles", "future", "attempts")
+    __slots__ = ("key", "site", "tiles", "future", "attempts",
+                 "t_queued", "t_start", "queue_wait_s")
 
     def __init__(self, key: str, site, tiles):
         self.key = key
@@ -98,6 +99,12 @@ class _Job:
         self.tiles = [int(x) for x in tiles]
         self.future: Future = Future()
         self.attempts = 0
+        # queue-wait vs in-flight attribution: t_queued stamps every
+        # (re)entry into the pending deque, queue_wait_s accumulates the
+        # waits across requeues, t_start marks the hand-off to a worker
+        self.t_queued = time.monotonic()
+        self.t_start: Optional[float] = None
+        self.queue_wait_s = 0.0
 
 
 class WorkerPoolTransport:
@@ -164,6 +171,13 @@ class WorkerPoolTransport:
         self._backing_off = 0           # dispatchers sleeping out a backoff
         self._spawn_error: Optional[BaseException] = None
         self.worker_restarts = 0        # respawns after a worker death
+        # per-job wait/run attribution (PR 8): totals for stats(), plus an
+        # optional observer(queue_wait_s, run_s) called as each job leaves
+        # the pool — repro.obs wires histograms here
+        self.queue_wait_seconds = 0.0   # summed time jobs spent queued
+        self.run_seconds = 0.0          # summed time jobs spent on workers
+        self.jobs_finished = 0          # jobs resolved (timed or failed)
+        self.job_observer = None
 
         self._threads = [
             threading.Thread(target=self._dispatch, args=(i,),
@@ -293,8 +307,10 @@ class WorkerPoolTransport:
                         if self._closing and not self._pending:
                             return
                         job = self._pending.popleft()
+                        job.queue_wait_s += time.monotonic() - job.t_queued
                     continue        # re-check the worker before sending
                 job_id += 1
+                job.t_start = time.monotonic()
                 try:
                     write_frame(proc.stdin, {"type": "job", "id": job_id,
                                              "site": asdict(job.site),
@@ -340,6 +356,20 @@ class WorkerPoolTransport:
                 self._cv.notify_all()
 
     # call with self._lock held
+    def _account(self, job: _Job) -> None:
+        """Book a finished job's queue-wait/run split (lock held)."""
+        run_s = 0.0 if job.t_start is None \
+            else time.monotonic() - job.t_start
+        self.queue_wait_seconds += job.queue_wait_s
+        self.run_seconds += run_s
+        self.jobs_finished += 1
+        obs = self.job_observer
+        if obs is not None:
+            try:
+                obs(job.queue_wait_s, run_s)
+            except Exception:
+                pass                    # telemetry must never fail a job
+
     def _requeue_or_fail(self, job: Optional[_Job], hard: bool = False,
                          reason: str = "worker death") -> None:
         if job is None:
@@ -357,9 +387,12 @@ class WorkerPoolTransport:
                 self.db.quarantine(job.key, job.attempts, reason)
             self._stats.failed_pairs += 1
             self._inflight.pop(job.key, None)
+            self._account(job)
             job.future.set_result(float("inf"))
         else:
             self._stats.retries += 1
+            job.t_queued = time.monotonic()     # wait clock restarts
+            job.t_start = None
             self._pending.append(job)
 
     def _resolve(self, job: _Job, v: float) -> None:
@@ -371,6 +404,7 @@ class WorkerPoolTransport:
             else:
                 self._stats.failed_pairs += 1
             self._inflight.pop(job.key, None)
+            self._account(job)
             job.future.set_result(v)
             self._cv.notify_all()
 
@@ -435,12 +469,28 @@ class WorkerPoolTransport:
         return "ok"
 
     def stats(self) -> dict:
+        """Transport counters + pool-specific keys, in both the unified
+        ``<subsystem>_<noun>_<unit>`` naming and the legacy spelling.
+
+        .. deprecated:: PR 8
+            ``workers`` / ``worker_restarts`` / ``quarantined`` are
+            compatibility aliases of ``pool_workers_count`` /
+            ``pool_worker_restarts_total`` / ``pool_quarantined_total``
+            (one release; see :class:`repro.obs.MetricsRegistry` for the
+            naming authority).
+        """
         with self._cv:
             s = self._stats.snapshot(in_flight=len(self._inflight))
             s["health"] = self._health_locked()
-        s["workers"] = self.workers
-        s["worker_restarts"] = self.worker_restarts
-        s["quarantined"] = self.db.n_quarantined if self.db is not None else 0
+            s["pool_queue_depth"] = len(self._pending)
+            s["pool_queue_wait_seconds_total"] = self.queue_wait_seconds
+            s["pool_run_seconds_total"] = self.run_seconds
+            s["pool_jobs_finished_total"] = self.jobs_finished
+        s["workers"] = s["pool_workers_count"] = self.workers
+        s["worker_restarts"] = s["pool_worker_restarts_total"] = \
+            self.worker_restarts
+        s["quarantined"] = s["pool_quarantined_total"] = \
+            self.db.n_quarantined if self.db is not None else 0
         return s
 
     def __enter__(self) -> "WorkerPoolTransport":

@@ -42,14 +42,37 @@ class _TransportStats:
         self.failed_pairs = 0    # measurements resolved to inf (fail-closed)
         self.retries = 0         # jobs requeued after a worker death
 
+    #: legacy key -> unified ``<subsystem>_<noun>_<unit>`` key
+    UNIFIED = {"hits": "transport_hits_total",
+               "misses": "transport_misses_total",
+               "coalesced": "transport_coalesced_total",
+               "timed_pairs": "transport_timed_pairs_total",
+               "failed_pairs": "transport_failed_pairs_total",
+               "retries": "transport_retries_total",
+               "in_flight": "transport_inflight_pairs",
+               "hit_rate": "transport_hit_ratio"}
+
     def snapshot(self, in_flight: int = 0) -> dict:
+        """Counter snapshot in both spellings.
+
+        .. deprecated:: PR 8
+            the bare keys (``hits``, ``misses``, ``coalesced``,
+            ``timed_pairs``, ``failed_pairs``, ``retries``,
+            ``in_flight``, ``hit_rate``) are compatibility aliases of
+            the unified ``transport_*`` keys in :attr:`UNIFIED`, kept
+            for one release.  New code should read the unified names —
+            they are the same series ``repro.obs`` registries expose.
+        """
         n = self.hits + self.misses + self.coalesced
-        return {"hits": self.hits, "misses": self.misses,
-                "coalesced": self.coalesced,
-                "timed_pairs": self.timed_pairs,
-                "failed_pairs": self.failed_pairs,
-                "retries": self.retries, "in_flight": in_flight,
-                "hit_rate": (self.hits / n) if n else 0.0}
+        s = {"hits": self.hits, "misses": self.misses,
+             "coalesced": self.coalesced,
+             "timed_pairs": self.timed_pairs,
+             "failed_pairs": self.failed_pairs,
+             "retries": self.retries, "in_flight": in_flight,
+             "hit_rate": (self.hits / n) if n else 0.0}
+        for old, new in self.UNIFIED.items():
+            s[new] = s[old]
+        return s
 
 
 class InProcessTransport:

@@ -50,10 +50,25 @@ from repro.core.vectorizer import TileProgram
 from repro.ft.monitor import PreemptionHandler
 from repro.measure import (TransportMeasureFn, make_transport,
                            resolve_surrogate)
+from repro.obs import NULL_TRACER, ObsHandle, resolve_obs
+from repro.obs.instrument import (instrument_oracle_stack,
+                                  instrument_program_store,
+                                  instrument_transport)
 from repro.surrogate import SurrogateOracle
 
 _COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
              "retries")
+
+#: legacy SessionHandle.stats() key -> unified key (satellite of PR 8)
+_SESSION_UNIFIED = {"wall_s": "session_wall_seconds",
+                    "fit_wall_s": "session_fit_seconds_total",
+                    "tune_wall_s": "session_tune_seconds_total",
+                    "tunes": "session_tunes_total",
+                    "sites_tuned": "session_sites_tuned_total",
+                    "agent_inferences": "session_agent_inferences_total",
+                    "store_hits": "session_store_hits_total",
+                    "store_misses": "session_store_misses_total",
+                    "in_flight_tunes": "session_inflight_tunes"}
 
 
 class SessionHandle:
@@ -89,15 +104,49 @@ class SessionHandle:
         self._closed = False
         t = oracle.transport
         self._base = dict.fromkeys(_COUNTERS, 0) if t is None else t.stats()
+        # -- obs wiring: the session's registry series + root span -----------
+        reg = service.registry
+        self._tracer = service.tracer
+        lbl = {"session": name}
+        self._m_fit_s = reg.histogram(
+            "session_fit_seconds", "fit() latency per session",
+            labelnames=("session",)).labels(**lbl)
+        self._m_tune_s = reg.histogram(
+            "session_tune_seconds", "tune() latency per session",
+            labelnames=("session",)).labels(**lbl)
+        self._m_tunes = reg.counter(
+            "session_tunes_total", "tunes completed",
+            labelnames=("session",)).labels(**lbl)
+        self._m_sites = reg.counter(
+            "session_sites_tuned_total", "sites tuned",
+            labelnames=("session",)).labels(**lbl)
+        self._m_infer = reg.counter(
+            "session_agent_inferences_total", "sites through agent.act",
+            labelnames=("session",)).labels(**lbl)
+        self._m_store_hits = reg.counter(
+            "session_store_hits_total", "tunes answered by program lookup",
+            labelnames=("session",)).labels(**lbl)
+        self._m_store_miss = reg.counter(
+            "session_store_misses_total", "tunes that ran inference",
+            labelnames=("session",)).labels(**lbl)
+        self._m_inflight = reg.gauge(
+            "session_inflight_tunes", "async tunes outstanding",
+            labelnames=("session",)).labels(**lbl)
+        self._span = self._tracer.begin("session", detached=True,
+                                        session=name, agent=agent.name)
 
     # -- the facade verbs ----------------------------------------------------
     def fit(self, sites: Sequence, **fit_kwargs) -> "SessionHandle":
         """Train/label the session's agent against its oracle."""
         self._check_open()
         t0 = time.perf_counter()
-        self.agent.fit(sites, self.oracle, **fit_kwargs)
+        with self._tracer.span("fit", parent=self._span,
+                               session=self.name, n_sites=len(sites)):
+            self.agent.fit(sites, self.oracle, **fit_kwargs)
+        dt = time.perf_counter() - t0
+        self._m_fit_s.observe(dt)
         with self._lock:
-            self._fit_wall += time.perf_counter() - t0
+            self._fit_wall += dt
         return self
 
     def tune(self, sites: Sequence) -> TileProgram:
@@ -112,15 +161,24 @@ class SessionHandle:
         fut = self.service._submit(self._tune, list(sites))
         with self._lock:
             self._outstanding.add(fut)
+            self._m_inflight.set(len(self._outstanding))
         fut.add_done_callback(self._forget)
         return fut
 
     def _tune(self, sites: list) -> TileProgram:
         t0 = time.perf_counter()
-        prog, hit = tune_through_store(sites, self.agent, self.oracle.space,
-                                       self.oracle, self.program_store)
+        with self._tracer.span("tune", parent=self._span,
+                               session=self.name, n_sites=len(sites)) as sp:
+            prog, hit = tune_through_store(sites, self.agent,
+                                           self.oracle.space,
+                                           self.oracle, self.program_store)
+            sp.set(store_hit=bool(hit))
+        dt = time.perf_counter() - t0
+        self._m_tune_s.observe(dt)
+        self._m_tunes.inc()
+        self._m_sites.inc(len(sites))
         with self._lock:
-            self._tune_wall += time.perf_counter() - t0
+            self._tune_wall += dt
             self._tunes += 1
             self._sites_tuned += len(sites)
             if self.program_store is not None and sites:
@@ -130,11 +188,16 @@ class SessionHandle:
                     self._store_misses += 1
             if not hit:
                 self._agent_inferences += len(sites)
+        if self.program_store is not None and sites:
+            (self._m_store_hits if hit else self._m_store_miss).inc()
+        if not hit:
+            self._m_infer.inc(len(sites))
         return prog
 
     def _forget(self, fut: Future) -> None:
         with self._lock:
             self._outstanding.discard(fut)
+            self._m_inflight.set(len(self._outstanding))
 
     # -- observability / lifecycle -------------------------------------------
     def health(self) -> str:
@@ -143,7 +206,17 @@ class SessionHandle:
         return self.oracle.health()
 
     def stats(self) -> dict:
-        """Per-session counters + transport deltas since ``open_session``."""
+        """Per-session counters + transport deltas since ``open_session``.
+
+        .. deprecated:: PR 8
+            the bare keys (``wall_s``, ``fit_wall_s``, ``tune_wall_s``,
+            ``tunes``, ``sites_tuned``, ``agent_inferences``,
+            ``store_hits``, ``store_misses``, ``in_flight_tunes``) are
+            compatibility aliases, kept for one release, of the unified
+            ``session_*`` keys — the same series the service's
+            :class:`~repro.obs.MetricsRegistry` exposes (labelled by
+            session name) in ``snapshot()``/``render_prom()``.
+        """
         t = self.oracle.transport
         now = self._base if t is None else t.stats()
         delta = {k: now.get(k, 0) - self._base.get(k, 0) for k in _COUNTERS}
@@ -151,17 +224,20 @@ class SessionHandle:
         delta["hit_rate"] = (delta["hits"] / n) if n else 0.0
         delta["in_flight"] = now.get("in_flight", 0)
         with self._lock:
-            return {"session": self.name, "agent": self.agent.name,
-                    "health": self.oracle.health(),
-                    "wall_s": time.perf_counter() - self._opened,
-                    "fit_wall_s": self._fit_wall,
-                    "tune_wall_s": self._tune_wall,
-                    "tunes": self._tunes, "sites_tuned": self._sites_tuned,
-                    "agent_inferences": self._agent_inferences,
-                    "store_hits": self._store_hits,
-                    "store_misses": self._store_misses,
-                    "in_flight_tunes": len(self._outstanding),
-                    "transport": delta}
+            out = {"session": self.name, "agent": self.agent.name,
+                   "health": self.oracle.health(),
+                   "wall_s": time.perf_counter() - self._opened,
+                   "fit_wall_s": self._fit_wall,
+                   "tune_wall_s": self._tune_wall,
+                   "tunes": self._tunes, "sites_tuned": self._sites_tuned,
+                   "agent_inferences": self._agent_inferences,
+                   "store_hits": self._store_hits,
+                   "store_misses": self._store_misses,
+                   "in_flight_tunes": len(self._outstanding),
+                   "transport": delta}
+        for old, new in _SESSION_UNIFIED.items():
+            out[new] = out[old]
+        return out
 
     def drain(self) -> None:
         """Block until this session's async tunes (and everything the
@@ -176,6 +252,7 @@ class SessionHandle:
         if not self._closed:
             self.drain()
             self._closed = True
+            self._span.end()
 
     def _check_open(self) -> None:
         if self._closed:
@@ -227,9 +304,15 @@ class TuningService:
                  db_path: Optional[str] = None, seed: int = 0,
                  program_store: Union[str, ProgramStore, None] = None,
                  max_parallel_tunes: int = 4, preemption: bool = False,
+                 metrics=None, trace=None,
                  **runner_kwargs):
         self.cfg = cfg
         self.seed = seed
+        # obs substrate (PR 8): metrics default to the process-wide
+        # registry (False disables), tracing is off unless trace= names a
+        # path (owned) or passes a Tracer (borrowed)
+        self.registry, self.tracer, self._owns_tracer = \
+            resolve_obs(metrics, trace)
         if isinstance(transport, str):
             self.transport = make_transport(transport, db_path=db_path,
                                             workers=workers, **runner_kwargs)
@@ -250,6 +333,15 @@ class TuningService:
         self._closed = False
         self._preemption = (PreemptionHandler(on_stop=self.close)
                             if preemption else None)
+        self._obs = ObsHandle(self.registry)
+        self._obs.adopt(instrument_transport(self.transport, self.registry,
+                                             self.tracer))
+        self._obs.adopt(instrument_program_store(self.program_store,
+                                                 self.registry))
+        self._m_sessions = self.registry.gauge(
+            "service_sessions_open", "sessions currently open")
+        self._m_sessions_total = self.registry.counter(
+            "service_sessions_total", "sessions opened over the lifetime")
 
     def _resolve_store(self, store: Union[str, ProgramStore, None]
                        ) -> Optional[ProgramStore]:
@@ -333,6 +425,15 @@ class TuningService:
         handle = SessionHandle(self, f"session-{self._n_opened}", a,
                                async_oracle, program_store=store)
         self._sessions.append(handle)
+        # the session's oracle view (env counters, breaker gauge, a
+        # per-session surrogate) feeds the service registry too; the
+        # shared transport is already instrumented — first wins
+        self._obs.adopt(instrument_oracle_stack(async_oracle.oracle,
+                                                self.registry, self.tracer))
+        if store is not None and store is not self.program_store:
+            self._obs.adopt(instrument_program_store(store, self.registry))
+        self._m_sessions_total.inc()
+        self._m_sessions.set(sum(not s._closed for s in self._sessions))
         return handle
 
     def _submit(self, fn, *args) -> Future:
@@ -345,8 +446,20 @@ class TuningService:
         return h() if callable(h) else "ok"
 
     def stats(self) -> dict:
-        return {"sessions_open": sum(not s._closed for s in self._sessions),
+        """Service-level counters + the shared transport's snapshot.
+
+        .. deprecated:: PR 8
+            ``sessions_open``/``sessions_total`` are compatibility
+            aliases of ``service_sessions_open`` /
+            ``service_sessions_total`` (one release) — the same series
+            :attr:`registry` exposes.
+        """
+        open_n = sum(not s._closed for s in self._sessions)
+        self._m_sessions.set(open_n)
+        return {"sessions_open": open_n,
+                "service_sessions_open": open_n,
                 "sessions_total": self._n_opened,
+                "service_sessions_total": self._n_opened,
                 "owns_transport": self._owns_transport,
                 "health": self.health(),
                 "transport": self.transport.stats()}
@@ -369,6 +482,10 @@ class TuningService:
             self.transport.close()
         for store in self._owned_stores:
             store.close()
+        self._m_sessions.set(0)
+        self._obs.close()
+        if self._owns_tracer:
+            self.tracer.close()
 
     def __enter__(self) -> "TuningService":
         return self

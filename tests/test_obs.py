@@ -1,0 +1,477 @@
+"""The observability substrate (PR 8): registry semantics under
+concurrency, histogram bucket math, span nesting + exception safety,
+trace round-trips, the Prometheus surfaces, and — the load-bearing
+guarantee — spy-proven "instrumentation changes no return values"
+parity on the live tuning stack."""
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, NULL_TRACER, MetricsRegistry,
+                       MetricsServer, Tracer, get_registry, read_trace,
+                       resolve_obs, to_chrome_trace)
+from repro.obs.instrument import (instrument_oracle_stack,
+                                  instrument_program_store,
+                                  instrument_transport)
+
+
+def small_cfg() -> NeuroVecConfig:
+    return NeuroVecConfig(
+        bm_choices=(16, 32), bn_choices=(128,), bk_choices=(128,),
+        bq_choices=(64,), bkv_choices=(128,), chunk_choices=(32,),
+        train_batch=32, sgd_minibatch=16, ppo_epochs=2)
+
+
+def sites():
+    from repro.models.compute import KernelSite
+    return [KernelSite(site="t.mm", kind="matmul", m=32, n=128, k=128),
+            KernelSite(site="t.attn", kind="attention", m=64, n=32, k=64,
+                       batch=2, causal=True)]
+
+
+# -- registry ----------------------------------------------------------------
+class TestRegistry:
+    def test_counter_gauge_basics(self):
+        r = MetricsRegistry()
+        c = r.counter("x_total", "help text")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+        g = r.gauge("depth")
+        g.set(5)
+        g.dec(2)
+        assert g.value == 3.0
+
+    def test_get_or_create_returns_same_family(self):
+        r = MetricsRegistry()
+        assert r.counter("a_total") is r.counter("a_total")
+        with pytest.raises(ValueError):        # kind conflict
+            r.gauge("a_total")
+        with pytest.raises(ValueError):        # labelnames conflict
+            r.counter("a_total", labelnames=("x",))
+        with pytest.raises(ValueError):        # invalid name
+            r.counter("9bad")
+
+    def test_labels(self):
+        r = MetricsRegistry()
+        c = r.counter("t_total", labelnames=("session",))
+        c.labels(session="s1").inc(2)
+        c.labels(session="s2").inc(3)
+        snap = r.snapshot()
+        assert snap['t_total{session="s1"}'] == 2.0
+        assert snap['t_total{session="s2"}'] == 3.0
+        with pytest.raises(ValueError):        # wrong label set
+            c.labels(nope="x")
+        with pytest.raises(ValueError):        # unlabelled use of labelled
+            c.inc()
+
+    def test_thread_safety_under_concurrent_sessions(self):
+        """N threads hammering one counter/histogram lose no updates."""
+        r = MetricsRegistry()
+        c = r.counter("hits_total")
+        h = r.histogram("lat_seconds", buckets=(0.5, 1.0))
+        n_threads, per = 8, 500
+
+        def work():
+            for i in range(per):
+                c.inc()
+                h.observe(0.25 if i % 2 else 0.75)
+
+        ts = [threading.Thread(target=work) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert c.value == n_threads * per
+        v = h.value
+        assert v["count"] == n_threads * per
+        assert v["buckets"]["0.5"] == n_threads * per // 2
+        assert v["buckets"]["+Inf"] == n_threads * per
+
+    def test_collector_runs_before_snapshot(self):
+        r = MetricsRegistry()
+        g = r.gauge("synced")
+        state = {"v": 1.0}
+        fn = r.register_collector(lambda: g.set(state["v"]))
+        assert r.snapshot()["synced"] == 1.0
+        state["v"] = 7.0
+        assert r.snapshot()["synced"] == 7.0
+        r.unregister_collector(fn)
+        state["v"] = 9.0
+        assert r.snapshot()["synced"] == 7.0
+
+
+class TestHistogram:
+    def test_bucket_correctness_le_semantics(self):
+        """v <= le lands in that bucket (Prometheus), cumulative counts."""
+        r = MetricsRegistry()
+        h = r.histogram("h_seconds", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.1, 0.5, 1.0, 5.0, 100.0):
+            h.observe(v)
+        v = h.value
+        # boundary values land in their own bucket: 0.1 <= 0.1
+        assert v["buckets"]["0.1"] == 2
+        assert v["buckets"]["1.0"] == 4
+        assert v["buckets"]["10.0"] == 5
+        assert v["buckets"]["+Inf"] == 6
+        assert v["count"] == 6
+        assert v["sum"] == pytest.approx(106.65)
+
+    def test_default_latency_buckets_log_spaced(self):
+        b = DEFAULT_LATENCY_BUCKETS
+        assert list(b) == sorted(b)
+        assert b[0] == pytest.approx(1e-6)
+        assert b[-1] == pytest.approx(1e2)
+        # two per decade
+        for lo, hi in zip(b, b[2:]):
+            assert hi / lo == pytest.approx(10.0, rel=1e-6)
+
+    def test_bad_buckets_rejected(self):
+        r = MetricsRegistry()
+        with pytest.raises(ValueError):
+            r.histogram("bad", buckets=(1.0, 0.5))
+        with pytest.raises(ValueError):
+            r.histogram("bad2", buckets=(1.0, 1.0))
+
+    def test_wrong_verbs_raise(self):
+        r = MetricsRegistry()
+        with pytest.raises(TypeError):
+            r.counter("c_total").observe(1)
+        with pytest.raises(TypeError):
+            r.gauge("g").observe(1)
+        with pytest.raises(TypeError):
+            r.histogram("h2").inc()
+
+
+class TestProm:
+    def test_render_prom_shapes(self):
+        r = MetricsRegistry()
+        r.counter("x_total", "things").inc(3)
+        r.gauge("q_depth").set(2)
+        h = r.histogram("lat_seconds", buckets=(0.5,))
+        h.observe(0.1)
+        h.observe(0.9)
+        text = r.render_prom()
+        assert "# TYPE x_total counter" in text
+        assert "x_total 3.0" in text
+        assert "# HELP x_total things" in text
+        assert 'lat_seconds_bucket{le="0.5"} 1' in text
+        assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+        assert "lat_seconds_count 2" in text
+
+    def test_http_exporter_serves_registry(self):
+        r = MetricsRegistry()
+        r.counter("served_total").inc(5)
+        with MetricsServer(port=0, registry=r) as srv:
+            body = urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/metrics", timeout=10
+            ).read().decode()
+            assert "served_total 5.0" in body
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/nope", timeout=10)
+
+
+# -- tracing -----------------------------------------------------------------
+class TestTrace:
+    def test_span_nesting_and_parent_links(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        with tr.span("outer") as outer:
+            with tr.span("inner") as inner:
+                assert inner.parent == outer.id
+            tr.event("ping", k=1)
+        tr.close()
+        recs = read_trace(p)
+        by = {r["name"]: r for r in recs}
+        assert by["inner"]["parent"] == by["outer"]["id"]
+        assert by["outer"]["parent"] is None
+        assert by["ping"]["parent"] == by["outer"]["id"]
+        assert by["ping"]["type"] == "event"
+        # inner closed first -> written first; duration nests inside
+        assert by["inner"]["dur"] <= by["outer"]["dur"]
+        assert by["inner"]["ts"] >= by["outer"]["ts"]
+
+    def test_span_closes_on_raise_and_records_error(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        with pytest.raises(RuntimeError):
+            with tr.span("boom"):
+                raise RuntimeError("kaput")
+        with tr.span("after") as sp:
+            # the raised span must be off the stack: no phantom parent
+            assert sp.parent is None
+        tr.close()
+        by = {r["name"]: r for r in read_trace(p)}
+        assert by["boom"]["error"] == "RuntimeError: kaput"
+        assert "error" not in by["after"]
+
+    def test_detached_root_and_explicit_parent(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        root = tr.begin("session", detached=True)
+        with tr.span("top") as sp:
+            assert sp.parent is None       # detached root not on the stack
+        with tr.span("child", parent=root) as sp:
+            assert sp.parent == root.id
+        root.end()
+        tr.close()
+        assert len(read_trace(p)) == 3
+
+    def test_cross_thread_spans_do_not_interleave(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        root = tr.begin("root", detached=True)
+        seen = []
+
+        def worker(i):
+            with tr.span(f"w{i}", parent=root) as sp:
+                seen.append(sp.parent)
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        root.end()
+        tr.close()
+        assert seen == [root.id] * 4
+        recs = read_trace(p)
+        assert len(recs) == 5
+        ids = [r["id"] for r in recs]
+        assert len(set(ids)) == 5              # unique ids across threads
+
+    def test_chrome_trace_round_trip(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        with tr.span("tune", n_sites=3):
+            tr.event("straggler", z=4.2)
+        tr.close()
+        out = to_chrome_trace(p)
+        evs = out["traceEvents"]
+        assert len(evs) == 2
+        x = [e for e in evs if e["ph"] == "X"][0]
+        i = [e for e in evs if e["ph"] == "i"][0]
+        assert x["name"] == "tune" and x["args"]["n_sites"] == 3
+        assert x["dur"] >= 0 and x["ts"] > 0          # microseconds
+        assert i["name"] == "straggler"
+        assert i["args"]["parent_id"] == x["args"]["span_id"]
+        json.dumps(out)                               # serializable
+
+    def test_read_trace_skips_corrupt_lines(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        tr.span("ok").end()
+        tr.close()
+        with open(p, "a") as f:
+            f.write("{torn json\n\n[1,2,3]\n")
+        recs = read_trace(p)
+        assert [r["name"] for r in recs] == ["ok"]
+
+    def test_null_tracer_is_inert(self):
+        with NULL_TRACER.span("x") as sp:
+            sp.set(a=1)
+        NULL_TRACER.event("y")
+        assert NULL_TRACER.n_spans == 0
+
+    def test_resolve_obs(self, tmp_path):
+        r1, t1, own1 = resolve_obs(None, None)
+        assert r1 is get_registry() and t1 is NULL_TRACER and not own1
+        r2, _, _ = resolve_obs(False, None)
+        assert r2 is not get_registry()
+        p = str(tmp_path / "t.jsonl")
+        r3, t3, own3 = resolve_obs(MetricsRegistry(), p)
+        assert own3 and t3.path == p
+        t3.close()
+        with pytest.raises(TypeError):
+            resolve_obs(42, None)
+        with pytest.raises(TypeError):
+            resolve_obs(None, 42)
+
+
+# -- instrumentation parity ---------------------------------------------------
+class _SpyRunner:
+    """Deterministic batched runner: value is a pure function of inputs."""
+
+    backend_key = "spy:test"
+
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, sites_, tiles):
+        self.calls += 1
+        return np.array([1e-3 * (i + 1) + 1e-5 * int(t[0])
+                         for i, t in enumerate(np.asarray(tiles))],
+                        np.float64)
+
+
+class TestInstrumentationParity:
+    def test_measured_env_returns_unchanged(self):
+        """Byte-identical MeasuredEnv results with and without obs."""
+        from repro.core.env import MeasuredEnv
+        from repro.measure.transport import (InProcessTransport,
+                                             TransportMeasureFn)
+        cfg = small_cfg()
+        ss = sites()
+        tiles = np.array([[16, 128, 128], [64, 128, 32]], np.int64)
+
+        def run(instrumented: bool):
+            env = MeasuredEnv(cfg, measure_fn=TransportMeasureFn(
+                InProcessTransport(_SpyRunner())), seed=0)
+            if instrumented:
+                h = instrument_oracle_stack(env, MetricsRegistry(),
+                                            NULL_TRACER)
+            out = env._measured_costs(ss, tiles)
+            rb = env.rewards_batch(ss, np.zeros((2, 3), np.int64))
+            if instrumented:
+                h.close()
+            return out, rb
+
+        (c0, r0), (c1, r1) = run(False), run(True)
+        np.testing.assert_array_equal(c0, c1)
+        np.testing.assert_array_equal(r0, r1)
+
+    def test_transport_submit_drain_unchanged(self):
+        from repro.measure.transport import InProcessTransport
+        ss = [sites()[0]] * 2             # same (site, tile) key twice
+        tiles = np.array([[16, 128, 128]] * 2, np.int64)
+
+        t_plain = InProcessTransport(_SpyRunner())
+        t_obs = InProcessTransport(_SpyRunner())
+        reg = MetricsRegistry()
+        h = instrument_transport(t_obs, reg, NULL_TRACER)
+        v_plain = [f.result() for f in t_plain.submit(ss, tiles)]
+        v_obs = [f.result() for f in t_obs.submit(ss, tiles)]
+        t_obs.drain()
+        assert v_plain == v_obs
+        snap = reg.snapshot()
+        assert snap["transport_misses_total"] == 1     # second coalesced
+        assert snap["transport_coalesced_total"] == 1
+        assert snap["transport_submit_seconds"]["count"] == 1
+        assert snap["transport_drain_seconds"]["count"] == 1
+        # double instrumentation is a no-op (first wins)
+        assert instrument_transport(t_obs, MetricsRegistry()) is None
+        h.close()
+
+    def test_tuning_service_parity_and_unified_stats(self, tmp_path):
+        """Two services — obs into an isolated registry vs metrics
+        disabled — produce identical tiles; stats() carries both the
+        legacy and the unified key spellings."""
+        from repro.service import TuningService
+        cfg = small_cfg()
+        ss = sites()
+
+        def run(metrics):
+            with TuningService(cfg, transport="inproc",
+                               metrics=metrics) as svc:
+                s = svc.open_session(agent="brute", oracle="model")
+                prog = s.fit(ss).tune(ss)
+                st = s.stats()
+                svc_st = svc.stats()
+            return prog, st, svc_st
+
+        reg = MetricsRegistry()
+        p_obs, st, svc_st = run(reg)
+        p_off, st_off, _ = run(False)
+        assert p_obs.tiles == p_off.tiles
+        # legacy keys preserved...
+        for k in ("tunes", "sites_tuned", "agent_inferences", "wall_s",
+                  "fit_wall_s", "tune_wall_s", "in_flight_tunes",
+                  "store_hits", "store_misses", "transport"):
+            assert k in st
+        # ...aliased to the unified spellings with equal values
+        assert st["session_tunes_total"] == st["tunes"] == 1
+        assert st["session_sites_tuned_total"] == st["sites_tuned"]
+        assert st["session_fit_seconds_total"] == st["fit_wall_s"]
+        assert svc_st["service_sessions_total"] == \
+            svc_st["sessions_total"] == 1
+        assert svc_st["service_sessions_open"] == svc_st["sessions_open"]
+        # the same series landed in the registry, labelled by session
+        snap = reg.snapshot()
+        assert snap['session_tunes_total{session="session-1"}'] == 1.0
+        assert snap["service_sessions_total"] == 1.0
+        assert snap['session_tune_seconds{session="session-1"}'
+                    ]["count"] == 1
+
+    def test_transport_stats_unified_aliases(self):
+        from repro.measure.transport import InProcessTransport
+        t = InProcessTransport(_SpyRunner())
+        ss = sites()
+        t.submit(ss, np.array([[16, 128, 128], [64, 128, 32]], np.int64))
+        s = t.stats()
+        assert s["transport_misses_total"] == s["misses"] == 2
+        assert s["transport_hits_total"] == s["hits"] == 0
+        assert s["transport_hit_ratio"] == s["hit_rate"]
+        assert s["transport_inflight_pairs"] == s["in_flight"] == 0
+
+    def test_program_store_instrumentation(self, tmp_path):
+        from repro.artifacts import ProgramStore
+        from repro.core.vectorizer import TileProgram
+        store = ProgramStore(str(tmp_path / "p.jsonl"))
+        reg = MetricsRegistry()
+        h = instrument_program_store(store, reg)
+        assert store.get("k1") is None
+        store.put("k1", TileProgram({"s": (32, 32, 32)}))
+        assert store.get("k1") is not None
+        snap = reg.snapshot()
+        assert snap["store_warm_hits_total"] == 1.0
+        assert snap["store_misses_total"] == 1.0
+        assert snap["store_programs_count"] == 1.0
+        h.close()
+        store.close()
+
+    def test_straggler_counter_and_trace_event(self, tmp_path, monkeypatch):
+        import repro.ft.monitor as m
+        reg = MetricsRegistry()
+        p = str(tmp_path / "t.jsonl")
+        tr = Tracer(p)
+        mon = m.StepMonitor(warmup=2, z_thresh=1.0, metrics=reg, tracer=tr)
+        # deterministic clock: two warmup steps, a jittered first
+        # post-warmup step (seeds var while z is still short-circuited
+        # to 0), one steady step, then a 100x outlier that must flag —
+        # and only it
+        clock = {"t": 0.0}
+        monkeypatch.setattr(m.time, "monotonic", lambda: clock["t"])
+        for i, dt in enumerate([0.1, 0.1, 0.2, 0.1, 10.0]):
+            mon.start()
+            clock["t"] += dt
+            mon.stop(i)
+        tr.close()
+        assert len(mon.events) == 1
+        assert reg.snapshot()["straggler_flags_total"] == 1.0
+        recs = read_trace(p)
+        assert [r["name"] for r in recs] == ["straggler"]
+        assert recs[0]["attrs"]["step"] == 4
+
+
+class TestFacadeObs:
+    def test_facade_trace_and_close_idempotent(self, tmp_path):
+        from repro.api import NeuroVectorizer
+        p = str(tmp_path / "t.jsonl")
+        nv = NeuroVectorizer(small_cfg(), agent="baseline",
+                             metrics=MetricsRegistry(), trace=p)
+        nv.fit(sites())
+        nv.tune_sites(sites())
+        nv.close()
+        nv.close()
+        recs = read_trace(p)
+        by_name = {}
+        for r in recs:
+            by_name.setdefault(r["name"], []).append(r)
+        sess = by_name["session"][0]
+        assert by_name["fit"][0]["parent"] == sess["id"]
+        assert by_name["tune"][0]["parent"] == sess["id"]
+        assert len(by_name["session"]) == 1    # idempotent close: one end
+
+    def test_facade_metrics_default_off_switch(self):
+        from repro.api import NeuroVectorizer
+        nv = NeuroVectorizer(small_cfg(), agent="baseline", metrics=False)
+        prog = nv.fit(sites()).tune_sites(sites())
+        nv.close()
+        assert len(prog.tiles) == 2
+        assert nv.registry is not get_registry()
