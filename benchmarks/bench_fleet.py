@@ -1,0 +1,212 @@
+"""Benchmark of the cross-host fleet transport (``repro.fleet``).
+
+Writes ``BENCH_fleet.json`` with the numbers the fleet story cares
+about:
+
+* ``throughput`` — timings/s through a localhost
+  ``SocketTransport -> MeasureServer -> WorkerPoolTransport`` stack vs.
+  the identical local pool driven directly; ``socket_overhead_ratio`` is
+  the fraction of local throughput retained across the TCP hop.
+* ``wire`` — per-pair round-trip overhead isolated from measurement
+  cost: N distinct pairs through an instant echo runner behind an
+  in-process server, ``wire_overhead_per_pair_ms`` = wall / N.
+* ``reconnect_recovery`` — two echo hosts, one killed mid-run: every
+  pair must still deliver (``failed_pairs == 0``); ``recovery_ratio``
+  is the throughput retained under the host loss.
+
+Interpret-mode timings on CPU are a throughput *proxy* — enough to
+track the wire-overhead trajectory per PR, not MXU behaviour.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_fleet`` (env
+``BENCH_FAST=1`` trims the pair set; ``BENCH_FLEET_OUT`` overrides the
+output path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+import zlib
+
+import numpy as np
+
+from repro.fleet import MeasureServer, SocketTransport
+from repro.measure import InProcessTransport, WorkerPoolTransport
+
+from benchmarks.bench_service import RUNNER_KW, _pairs, _submit_all
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_FLEET_OUT", "BENCH_fleet.json")
+N_WIRE_PAIRS = 64 if FAST else 256
+
+
+class _EchoRunner:
+    """Instant deterministic runner: isolates wire cost from measurement
+    cost (values derive from the key, like the test fakes, but local to
+    the benchmark — no test-directory import)."""
+
+    backend_key = "echo-backend"
+
+    def __init__(self, delay: float = 0.0):
+        self.delay = delay
+
+    def __call__(self, sites, tiles):
+        if self.delay:
+            time.sleep(self.delay)
+        return np.array(
+            [1e-4 * (1 + zlib.crc32(
+                f"{s.key()}|{tuple(int(x) for x in t)}".encode()) % 1000)
+             for s, t in zip(sites, tiles)], np.float64)
+
+
+def _wire_sites(n: int):
+    from repro.models.compute import KernelSite
+    return [KernelSite(site=f"bf.w{i}", kind="matmul", m=32, n=128, k=128)
+            for i in range(n)]
+
+
+def _kill_host_mid_run(transport, server, after_pairs: int
+                       ) -> threading.Thread:
+    """Close one serve-worker host once ``after_pairs`` results landed —
+    provably mid-flight."""
+    def _run():
+        while True:
+            st = transport.stats()
+            if st["timed_pairs"] + st["failed_pairs"] >= after_pairs:
+                break
+            if st["in_flight"] == 0 and st["timed_pairs"]:
+                return                  # batch already finished: no fault
+            time.sleep(0.005)
+        server.drop_connections()
+        server.close()
+    th = threading.Thread(target=_run, daemon=True)
+    th.start()
+    return th
+
+
+def run() -> dict:
+    pairs = _pairs()
+    tmp = tempfile.mkdtemp(prefix="bench_fleet_")
+
+    # -- throughput: local pool vs the same pool behind a socket ------------
+    pool = WorkerPoolTransport(workers=2,
+                               db=os.path.join(tmp, "local.jsonl"),
+                               runner_kwargs=RUNNER_KW)
+    t0 = time.perf_counter()
+    _submit_all(pool, pairs)
+    local_wall = time.perf_counter() - t0
+    st_local = pool.stats()
+    pool.close()
+    assert st_local["timed_pairs"] == len(pairs), st_local
+
+    inner = WorkerPoolTransport(workers=2, runner_kwargs=RUNNER_KW)
+    srv = MeasureServer(inner)
+    srv.start()
+    fleet = SocketTransport([srv.address],
+                            db=os.path.join(tmp, "fleet.jsonl"))
+    t0 = time.perf_counter()
+    _submit_all(fleet, pairs)
+    fleet_wall = time.perf_counter() - t0
+    st_fleet = fleet.stats()
+    fleet.close()
+    srv.close()
+    inner.close()
+    assert st_fleet["timed_pairs"] == len(pairs), st_fleet
+    local_rate = len(pairs) / local_wall
+    fleet_rate = len(pairs) / fleet_wall
+    throughput = {
+        "local_pool_timings_per_s": local_rate,
+        "socket_fleet_timings_per_s": fleet_rate,
+        "socket_overhead_ratio": fleet_rate / local_rate,
+        "local_wall_s": local_wall, "fleet_wall_s": fleet_wall}
+
+    # -- wire overhead per pair: echo runner, measurement cost ~0 -----------
+    inner = InProcessTransport(_EchoRunner())
+    srv = MeasureServer(inner)
+    srv.start()
+    fleet = SocketTransport([srv.address])
+    sites = _wire_sites(N_WIRE_PAIRS)
+    tiles = np.array([[16, 128, 128]] * N_WIRE_PAIRS, np.int64)
+    t0 = time.perf_counter()
+    futs = fleet.submit(sites, tiles)
+    fleet.drain()
+    wall = time.perf_counter() - t0
+    assert all(f.result() > 0 for f in futs)
+    fleet.close()
+    srv.close()
+    inner.close()
+    wire = {"n_pairs": N_WIRE_PAIRS, "wall_s": wall,
+            "wire_overhead_per_pair_ms": 1e3 * wall / N_WIRE_PAIRS,
+            "round_trips_per_s": N_WIRE_PAIRS / wall}
+
+    # -- reconnect recovery: one of two echo hosts dies mid-run -------------
+    delay = 0.002
+    inners = [InProcessTransport(_EchoRunner(delay=delay)) for _ in range(2)]
+    servers = [MeasureServer(i) for i in inners]
+    for s in servers:
+        s.start()
+    sites = _wire_sites(N_WIRE_PAIRS)
+
+    # healthy baseline over both hosts
+    fleet = SocketTransport([s.address for s in servers])
+    t0 = time.perf_counter()
+    _submit_all(fleet, [(s, (16, 128, 128)) for s in sites])
+    healthy_wall = time.perf_counter() - t0
+    fleet.close()
+
+    # faulted run (fresh client, no DB: every pair re-measures) with one
+    # host killed mid-run
+    fleet = SocketTransport([s.address for s in servers],
+                            max_connect_failures=2, backoff_base=0.05,
+                            backoff_cap=0.2)
+    killer = _kill_host_mid_run(fleet, servers[0],
+                                after_pairs=N_WIRE_PAIRS // 8)
+    t0 = time.perf_counter()
+    _submit_all(fleet, [(s, (16, 128, 128)) for s in sites])
+    faulted_wall = time.perf_counter() - t0
+    killer.join(timeout=10)
+    st = fleet.stats()
+    fleet.close()
+    for s in servers:
+        s.close()
+    for i in inners:
+        i.close()
+    assert st["failed_pairs"] == 0, st        # every pair still delivered
+    healthy_rate = N_WIRE_PAIRS / healthy_wall
+    faulted_rate = N_WIRE_PAIRS / faulted_wall
+    reconnect = {
+        "healthy_pairs_per_s": healthy_rate,
+        "faulted_pairs_per_s": faulted_rate,
+        "recovery_ratio": faulted_rate / healthy_rate,
+        "retries": st["retries"], "failed_pairs": st["failed_pairs"],
+        "reconnects": st["fleet_reconnects_total"],
+        "health_after": st["health"]}
+
+    results = {
+        "config": {"fast": FAST, "n_pairs": len(pairs),
+                   "n_wire_pairs": N_WIRE_PAIRS, "runner": RUNNER_KW,
+                   "cpu_count": os.cpu_count()},
+        "throughput": throughput,
+        "wire": wire,
+        "reconnect_recovery": reconnect,
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"bench_fleet,local_pool_timings_per_s,{local_rate:.2f}")
+    print(f"bench_fleet,socket_fleet_timings_per_s,{fleet_rate:.2f}")
+    print(f"bench_fleet,socket_overhead_ratio,"
+          f"{throughput['socket_overhead_ratio']:.2f}")
+    print(f"bench_fleet,wire_overhead_per_pair_ms,"
+          f"{wire['wire_overhead_per_pair_ms']:.3f}")
+    print(f"bench_fleet,reconnect_recovery_ratio,"
+          f"{reconnect['recovery_ratio']:.2f}")
+    print(f"bench_fleet,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -1,0 +1,111 @@
+"""Cross-host tuning fleet end to end (``repro.fleet``).
+
+The client in this process never times a kernel: measurements ship over
+TCP to ``serve-worker`` daemons, and both persistent stores (the timing
+DB and the tuned-program store) live behind one shared
+``serve-artifacts`` daemon that every fleet client subscribes to.
+
+Start the daemons (one terminal each, or backgrounded):
+
+    PYTHONPATH=src python -m repro.fleet serve-worker \\
+        --port 7761 --transport pool --workers 2 --reps 1
+    PYTHONPATH=src python -m repro.fleet serve-artifacts \\
+        --port 7762 --measure-db /tmp/fleet_measure.jsonl \\
+        --program-store /tmp/fleet_programs.jsonl
+
+then run this twice:
+
+    PYTHONPATH=src python examples/fleet_autotune.py \\
+        --hosts 127.0.0.1:7761 --artifacts 127.0.0.1:7762 [--steps 48]
+
+Run 1 times every (site, tile) pair on the serve-worker hosts and a
+*second, independent* subscriber in this process observes the finished
+tile program arrive by push — without reopening the store.  Run 2 finds
+the shared DB warm (zero timings fleet-wide) and the program store
+answers the whole tune by lookup.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "examples")
+
+from measured_autotune import demo_sites, small_cfg  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", required=True,
+                    help="comma-separated serve-worker host:port list")
+    ap.add_argument("--artifacts", required=True,
+                    help="serve-artifacts host:port (shared MeasureDB + "
+                         "ProgramStore)")
+    ap.add_argument("--steps", type=int, default=48,
+                    help="PPO environment steps (measured rewards)")
+    ap.add_argument("--agent", default="ppo",
+                    help="any repro.api registry name (ppo, brute, ...)")
+    ap.add_argument("--out", default="/tmp/repro_fleet_tiles.json")
+    args = ap.parse_args(argv)
+
+    from repro.api import NeuroVectorizer, TileProgram
+    from repro.fleet import RemoteProgramStore
+
+    hosts = [h.strip() for h in args.hosts.split(",") if h.strip()]
+    art = f"fleet://{args.artifacts}"
+    cfg = small_cfg()
+    sites = demo_sites()
+
+    # an independent subscriber, opened BEFORE tuning: if the tune below
+    # produces a fresh program, this client must see it arrive by push —
+    # the serving-process half of fleet store invalidation
+    watcher = RemoteProgramStore(art)
+    baseline_entries = len(watcher)
+
+    nv = NeuroVectorizer(cfg, agent=args.agent, oracle="measured", seed=0,
+                         transport="socket", hosts=hosts,
+                         db_path=art, program_store=art)
+    t = nv.oracle.measure_fn.transport
+    print(f"== fleet tune: {len(hosts)} host(s) "
+          f"[{', '.join(hosts)}], artifacts {args.artifacts}, "
+          f"backend {t.backend_key} ==")
+    fit_kw = ({"total_steps": args.steps} if args.agent == "ppo" else {})
+    nv.fit(sites, **fit_kw)
+    prog = nv.tune_sites(sites)
+    assert isinstance(prog, TileProgram) and len(prog.tiles) == len(sites)
+    prog.save(args.out)
+    print(f"tuned {len(prog.tiles)} sites -> {args.out}")
+
+    if nv.store_hits:
+        print(f"store warm: {nv.store_hits} tune(s) answered by shared "
+              f"program-store lookup ({nv.agent_inferences} agent "
+              f"inferences)")
+    else:
+        # fresh program: wait for the server to push it to the watcher
+        deadline = time.time() + 10.0
+        while time.time() < deadline and (
+                watcher.pushes_received == 0
+                or len(watcher) <= baseline_entries):
+            time.sleep(0.05)
+        assert watcher.pushes_received >= 1, \
+            "watcher never received the push"
+        print("push-invalidation: serving client observed the tuned "
+              "program without reopening the store "
+              f"({watcher.pushes_received} push(es), "
+              f"{len(watcher)} entries)")
+
+    st = t.stats()
+    print(f"fleet hosts: {st['fleet_hosts_live']}/{st['fleet_hosts_count']}"
+          f" live, {st['fleet_reconnects_total']} reconnects, health "
+          f"{st['health']}")
+    print(f"measurements: {st['timed_pairs']} timed, "
+          f"{st['hits']} DB hits, {st['misses']} misses, "
+          f"{st['coalesced']} coalesced "
+          f"(hit rate {st['hit_rate']:.2f}) — rerun and timed goes to 0")
+    watcher.close()
+    nv.close()
+    return prog
+
+
+if __name__ == "__main__":
+    main()

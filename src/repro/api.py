@@ -65,8 +65,8 @@ import time
 from typing import Optional, Sequence, Union
 
 from repro.artifacts import (ArtifactError, ProgramStore, agent_fingerprint,
-                             load_agent, program_key, save_agent,
-                             tune_through_store)
+                             load_agent, open_program_store, program_key,
+                             save_agent, tune_through_store)
 from repro.configs.neurovec import (DEFAULT, NeuroVecConfig, cfg_from_dict,
                                     cfg_to_dict)
 from repro.core.agents import (AGENT_NAMES, BaselineHeuristicAgent,
@@ -144,6 +144,10 @@ class NeuroVectorizer:
     ``"measured"``      "pool", ``workers=N``   timings fanned out to N
                                                 subprocess workers
                                                 (``WorkerPoolTransport``)
+    ``"measured"``      "socket", ``hosts=``    timings shipped to remote
+                                                ``serve-worker`` hosts
+                                                (``repro.fleet``
+                                                ``SocketTransport``)
     ``"measured"``      a ``MeasureTransport``  timings through your
                                                 transport (borrowed — the
                                                 facade won't close it)
@@ -174,9 +178,13 @@ class NeuroVectorizer:
             TPU/GPU, interpret-mode Pallas on CPU.
     transport: a column of the matrix above (``oracle="measured"`` only).
     workers: pool size for ``transport="pool"``.
+    hosts:  ``serve-worker`` addresses (``["host:port", ...]``) for
+            ``transport="socket"``.
     db_path: persistent timing-DB path for ``oracle="measured"``
             (repeat runs against the same path re-time nothing — under
-            any transport).
+            any transport).  A ``fleet://host:port`` path attaches the
+            shared ``serve-artifacts`` timing store instead of a local
+            file; the same scheme works for ``program_store=``.
     oracle_kwargs: extra :class:`repro.measure.MeasureRunner` options for
             ``oracle="measured"`` (``reps=``, ``warmup=``, ``max_dim=``,
             ``interpret=``...) — applied per worker under the pool.
@@ -204,6 +212,7 @@ class NeuroVectorizer:
                  oracle_kwargs: Optional[dict] = None,
                  transport: Union[str, MeasureTransport, None] = None,
                  workers: Optional[int] = None,
+                 hosts=None,
                  program_store: Union[str, ProgramStore, None] = None,
                  prune_topk: Optional[int] = None,
                  surrogate: Union[str, SurrogateModel, None] = None,
@@ -222,14 +231,15 @@ class NeuroVectorizer:
         if oracle == "measured":
             self.oracle: Oracle = make_measured_env(
                 cfg, db_path=db_path, seed=seed, transport=transport,
-                workers=workers, prune_topk=prune_topk,
+                workers=workers, hosts=hosts, prune_topk=prune_topk,
                 surrogate=surrogate, **(oracle_kwargs or {}))
             # a borrowed MeasureTransport instance is not ours to close
             self._owns_oracle = transport is None or isinstance(transport,
                                                                 str)
         elif oracle == "surrogate":
-            if oracle_kwargs or transport is not None or workers is not None:
-                raise ValueError("oracle_kwargs/transport/workers "
+            if oracle_kwargs or transport is not None or \
+                    workers is not None or hosts is not None:
+                raise ValueError("oracle_kwargs/transport/workers/hosts "
                                  "apply only to oracle='measured'")
             if prune_topk is not None:
                 raise ValueError("prune_topk applies only to "
@@ -245,9 +255,10 @@ class NeuroVectorizer:
             self.oracle = SurrogateOracle(cfg, model, seed=seed)
         else:
             if db_path is not None or oracle_kwargs or \
-                    transport is not None or workers is not None:
-                raise ValueError("db_path/oracle_kwargs/transport/workers "
-                                 "apply only to oracle='measured'")
+                    transport is not None or workers is not None or \
+                    hosts is not None:
+                raise ValueError("db_path/oracle_kwargs/transport/workers/"
+                                 "hosts apply only to oracle='measured'")
             if prune_topk is not None or surrogate is not None:
                 raise ValueError("prune_topk/surrogate apply only to "
                                  "oracle='measured' or oracle='surrogate'")
@@ -263,7 +274,7 @@ class NeuroVectorizer:
                              if isinstance(agent, str) else agent)
         self._owns_store = isinstance(program_store, str)
         self.program_store: Optional[ProgramStore] = (
-            ProgramStore(program_store) if self._owns_store
+            open_program_store(program_store) if self._owns_store
             else program_store)
         # warm-start observability: how many sites actually went through
         # agent.act vs. were answered from the store
@@ -280,6 +291,7 @@ class NeuroVectorizer:
             "transport": (transport if isinstance(transport, str)
                           or transport is None else "custom"),
             "workers": workers, "db_path": db_path,
+            "hosts": list(hosts) if hosts else None,
             "oracle_kwargs": dict(oracle_kwargs or {}), "seed": seed,
             "prune_topk": prune_topk,
             # a live SurrogateModel instance is not serializable; measured
@@ -440,7 +452,8 @@ class NeuroVectorizer:
              agent: Optional[Agent] = None,
              oracle: Union[str, Oracle, None] = None,
              transport: Union[str, MeasureTransport, None] = None,
-             workers: Optional[int] = None, db_path: Optional[str] = None,
+             workers: Optional[int] = None, hosts=None,
+             db_path: Optional[str] = None,
              program_store: Union[str, ProgramStore, None] = None,
              seed: Optional[int] = None,
              prune_topk: Optional[int] = None,
@@ -493,6 +506,7 @@ class NeuroVectorizer:
             kw = {"transport": (spec["transport"] if transport is None
                                 else transport),
                   "workers": spec["workers"] if workers is None else workers,
+                  "hosts": spec.get("hosts") if hosts is None else hosts,
                   "db_path": spec["db_path"] if db_path is None else db_path,
                   "oracle_kwargs": spec["oracle_kwargs"] or None,
                   "prune_topk": (spec.get("prune_topk")

@@ -21,11 +21,11 @@ from repro.artifacts.agentio import (ARTIFACT_FORMAT, ArtifactError,
                                      agent_fingerprint, fingerprint_state,
                                      load_agent, read_agent_state,
                                      save_agent)
-from repro.artifacts.store import (ProgramStore, oracle_fingerprint,
-                                   program_key, sites_fingerprint,
-                                   tune_through_store)
+from repro.artifacts.store import (ProgramStore, open_program_store,
+                                   oracle_fingerprint, program_key,
+                                   sites_fingerprint, tune_through_store)
 
 __all__ = ["ArtifactError", "ARTIFACT_FORMAT", "save_agent", "load_agent",
            "read_agent_state", "agent_fingerprint", "fingerprint_state",
-           "ProgramStore", "program_key", "oracle_fingerprint",
+           "ProgramStore", "open_program_store", "program_key", "oracle_fingerprint",
            "sites_fingerprint", "tune_through_store"]

@@ -103,26 +103,65 @@ class ProgramStore:
         self.skipped_lines = 0
         self._fh = None
         self._lock = threading.Lock()
+        self._read_offset = 0           # file bytes folded into _mem so far
         self._load()
 
     # -- persistence ---------------------------------------------------------
     def _load(self) -> None:
+        self._read_offset = 0
         if not os.path.exists(self.path):
             return
-        with open(self.path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                    key = rec["k"]
-                    tiles = {str(sk): tuple(int(x) for x in tv)
-                             for sk, tv in rec["v"].items()}
-                except (ValueError, KeyError, TypeError, AttributeError):
-                    self.skipped_lines += 1
-                    continue
-                self._mem[key] = tiles          # duplicate keys: last wins
+        with open(self.path, "rb") as f:
+            data = f.read()
+        self._read_offset = len(data)
+        for raw in data.split(b"\n"):
+            self._apply_line(raw)
+
+    def _apply_line(self, raw: bytes) -> bool:
+        """Parse one JSONL record into ``_mem`` (last wins); ``False``
+        (counting ``skipped_lines``) on anything unparseable."""
+        line = raw.strip()
+        if not line:
+            return False
+        try:
+            rec = json.loads(line.decode("utf-8"))
+            key = rec["k"]
+            tiles = {str(sk): tuple(int(x) for x in tv)
+                     for sk, tv in rec["v"].items()}
+        except (ValueError, KeyError, TypeError, AttributeError):
+            self.skipped_lines += 1
+            return False
+        self._mem[key] = tiles          # duplicate keys: last wins
+        return True
+
+    def refresh(self) -> int:
+        """Fold in records appended to the file since open (or the last
+        refresh) — the *pull* half of fleet store invalidation (the push
+        half is the ``serve-artifacts`` subscription).  Returns the
+        number of records applied, last-wins like :meth:`_load`.
+
+        Only complete (newline-terminated) lines are consumed: a torn
+        tail from a writer caught mid-append stays unread until the next
+        refresh sees its newline.  Records this store appended itself
+        may be re-applied — idempotent by last-wins."""
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+            try:
+                size = os.path.getsize(self.path)
+            except OSError:
+                return 0
+            if size <= self._read_offset:
+                return 0
+            with open(self.path, "rb") as f:
+                f.seek(self._read_offset)
+                data = f.read()
+            end = data.rfind(b"\n")
+            if end < 0:
+                return 0
+            chunk = data[:end + 1]
+            self._read_offset += len(chunk)
+            return sum(self._apply_line(raw) for raw in chunk.split(b"\n"))
 
     def _append(self, key: str, tiles: dict) -> None:
         if self._fh is None:
@@ -156,6 +195,13 @@ class ProgramStore:
             self._append(key, tiles)
             self._mem[key] = tiles
 
+    def records(self) -> dict:
+        """Plain-dict snapshot ``{key: {site_key: [t0, t1, t2]}}`` — the
+        sync surface the fleet artifact service serves to subscribers."""
+        with self._lock:
+            return {k: {sk: list(tv) for sk, tv in tiles.items()}
+                    for k, tiles in self._mem.items()}
+
     def stats(self) -> dict:
         with self._lock:
             n = self.hits + self.misses
@@ -177,6 +223,20 @@ class ProgramStore:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+def open_program_store(path: str):
+    """:class:`ProgramStore` factory that understands fleet addresses.
+
+    A ``fleet://host:port`` path opens a
+    :class:`~repro.fleet.artifacts.RemoteProgramStore` — a live,
+    push-invalidated mirror of the shared ``serve-artifacts`` store —
+    so facade/service/serve callers point at a fleet simply by passing
+    a different *string*.  Anything else is a local JSONL path."""
+    if isinstance(path, str) and path.startswith("fleet://"):
+        from repro.fleet import RemoteProgramStore
+        return RemoteProgramStore(path)
+    return ProgramStore(path)
 
 
 def tune_through_store(sites: Sequence, agent, space, oracle,

@@ -1,0 +1,35 @@
+"""``repro.fleet`` — cross-host measurement + shared artifacts.
+
+The "one tuning service, many machines" subsystem: the
+:class:`SocketTransport` ships (site, tiles) batches to remote
+``serve-worker`` hosts over TCP (full
+:class:`~repro.core.protocols.MeasureTransport` contract — conformance-
+and chaos-tested over real localhost sockets in ``tests/test_fleet.py``),
+and the ``serve-artifacts`` daemon (:class:`ArtifactServer`) promotes
+:class:`~repro.measure.db.MeasureDB` + :class:`~repro.artifacts.store.
+ProgramStore` into a shared, push-invalidated, keep-N-versioned artifact
+service with :class:`RemoteMeasureDB` / :class:`RemoteProgramStore`
+client mirrors.
+
+Nothing upstream imports this package unless asked to: callers opt in
+with ``make_transport("socket", hosts=[...])``, facade/service
+``transport="socket", hosts=[...]``, ``serve.py --transport socket
+--hosts ...``, or a ``fleet://host:port`` store path.  Daemons start
+from the CLI::
+
+    python -m repro.fleet serve-worker --port 7761 --transport pool --workers 2
+    python -m repro.fleet serve-artifacts --port 7762 \\
+        --measure-db measure.jsonl --program-store programs.jsonl
+"""
+from repro.fleet.artifacts import (ArtifactServer, RemoteMeasureDB,
+                                   RemoteProgramStore, complete_versions,
+                                   write_version)
+from repro.fleet.rpc import FLEET_SCHEME, PROTO_VERSION, parse_address
+from repro.fleet.transport import SocketTransport
+from repro.fleet.worker_server import MeasureServer
+
+__all__ = [
+    "ArtifactServer", "FLEET_SCHEME", "MeasureServer", "PROTO_VERSION",
+    "RemoteMeasureDB", "RemoteProgramStore", "SocketTransport",
+    "complete_versions", "parse_address", "write_version",
+]

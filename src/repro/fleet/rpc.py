@@ -1,0 +1,227 @@
+"""Shared plumbing for the fleet wire protocol.
+
+Both fleet daemons (``serve-worker``, ``serve-artifacts``) and both
+client halves (:class:`~repro.fleet.transport.SocketTransport`, the
+remote stores in :mod:`repro.fleet.artifacts`) speak the same
+length-prefixed JSON framing as the worker-pool pipe protocol
+(:mod:`repro.measure.wire`), over TCP.  This module holds the pieces
+they share: address parsing (including the ``fleet://host:port`` URL
+scheme that lets store *paths* name remote services), buffered socket
+streams, and the threaded accept loop every daemon runs.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+
+from repro.measure.wire import read_frame, write_frame  # noqa: F401 (re-export)
+
+#: Protocol version carried in every hello/welcome frame.  A server
+#: refuses a hello whose ``proto`` it does not speak, so a mixed-version
+#: fleet fails loudly at handshake instead of mid-batch.
+PROTO_VERSION = 1
+
+#: URL scheme marking a store path as remote ("fleet://host:port").
+FLEET_SCHEME = "fleet://"
+
+
+def parse_address(address) -> "tuple[str, int]":
+    """``"host:port"`` / ``"fleet://host:port"`` / ``(host, port)`` →
+    ``(host, port)``."""
+    if isinstance(address, (tuple, list)):
+        host, port = address
+        return str(host), int(port)
+    addr = str(address)
+    if addr.startswith(FLEET_SCHEME):
+        addr = addr[len(FLEET_SCHEME):]
+    host, sep, port = addr.rpartition(":")
+    if not sep or not host:
+        raise ValueError(
+            f"fleet address {address!r} is not host:port — e.g. "
+            f"'127.0.0.1:7761' or 'fleet://tpu-host:7761'")
+    return host, int(port)
+
+
+def format_address(host: str, port: int) -> str:
+    return f"{host}:{port}"
+
+
+class SocketStream:
+    """A connected TCP socket with buffered read/write file views.
+
+    Owns the socket: ``close()`` tears down both file objects and the
+    socket itself (idempotent, swallows errors — a ruined connection is
+    closed the same way as a healthy one).
+    """
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        # TCP_NODELAY: frames are small request/response units; Nagle
+        # buffering only adds latency here.
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self.rfile = sock.makefile("rb")
+        self.wfile = sock.makefile("wb")
+
+    def read(self) -> "dict | None":
+        return read_frame(self.rfile)
+
+    def write(self, msg: dict) -> None:
+        write_frame(self.wfile, msg)
+
+    def settimeout(self, timeout) -> None:
+        self.sock.settimeout(timeout)
+
+    def close(self) -> None:
+        # Wake any thread blocked in read() BEFORE touching the file
+        # objects: closing a buffered file acquires its internal lock,
+        # which a reader parked in recv() holds — a cross-thread close
+        # would deadlock on it.  shutdown() returns that recv EOF
+        # immediately; only then is closing the files safe.
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._close_parts()
+
+    def kill(self) -> None:
+        """Abort the connection without the FIN handshake (RST to the
+        peer where the OS allows) — the hard-failure seam chaos tests
+        use to simulate a killed host."""
+        try:
+            # SHUT_RD wakes a local blocked reader (same deadlock hazard
+            # as close()) without sending FIN — the peer must see the
+            # RST from the lingering close below, not a clean EOF.
+            self.sock.shutdown(socket.SHUT_RD)
+        except OSError:
+            pass
+        try:
+            self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                                 struct.pack("ii", 1, 0))
+        except OSError:
+            pass
+        self._close_parts()
+
+    def _close_parts(self) -> None:
+        for part in (self.rfile, self.wfile, self.sock):
+            try:
+                part.close()
+            except OSError:
+                pass
+
+
+def connect(address, timeout=None) -> SocketStream:
+    host, port = parse_address(address)
+    return SocketStream(socket.create_connection((host, port),
+                                                 timeout=timeout))
+
+
+class FrameServer:
+    """Threaded TCP accept loop: one daemon thread per connection.
+
+    Subclasses implement ``handle(stream)`` — called on its own thread
+    with a :class:`SocketStream`; the server tracks live streams so
+    ``close()`` (and the chaos seam ``drop_connections()``) can tear
+    them down.  ``port=0`` binds an ephemeral port; the bound address is
+    exposed as ``.address`` either way.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._listener = socket.create_server((host, port))
+        bound = self._listener.getsockname()
+        self.host, self.port = bound[0], bound[1]
+        self.address = format_address(self.host, self.port)
+        self._lock = threading.Lock()
+        self._streams: "set[SocketStream]" = set()
+        self._threads: "list[threading.Thread]" = []
+        self._accept_thread = None
+        self._closing = False
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "FrameServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"fleet-accept-{self.port}",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._accept_loop()
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            stream = SocketStream(sock)
+            with self._lock:
+                if self._closing:
+                    stream.close()
+                    return
+                self._streams.add(stream)
+                t = threading.Thread(target=self._run_handler,
+                                     args=(stream,),
+                                     name=f"fleet-conn-{self.port}",
+                                     daemon=True)
+                self._threads.append(t)
+            t.start()
+
+    def _run_handler(self, stream: SocketStream) -> None:
+        try:
+            self.handle(stream)
+        except (OSError, EOFError, ValueError):
+            pass  # peer vanished or ruined the stream — drop it
+        finally:
+            stream.close()
+            with self._lock:
+                self._streams.discard(stream)
+            self.connection_closed(stream)
+
+    def handle(self, stream: SocketStream) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def connection_closed(self, stream: SocketStream) -> None:
+        """Hook: a connection's handler has finished (any reason)."""
+
+    def drop_connections(self) -> None:
+        """Abort every live client connection (listener stays up) — the
+        connection-reset chaos seam: clients must reconnect + retry."""
+        with self._lock:
+            streams = list(self._streams)
+        for s in streams:
+            s.kill()
+
+    def close(self) -> None:
+        """Stop accepting and tear down every live connection.
+        Idempotent."""
+        with self._lock:
+            if self._closing:
+                return
+            self._closing = True
+            streams = list(self._streams)
+        try:
+            # closing an fd does not wake a thread already blocked in
+            # accept() on it (Linux) — shutdown() does, so the accept
+            # thread exits instead of leaking
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for s in streams:
+            s.close()
+        for t in list(self._threads):
+            t.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,503 @@
+"""``SocketTransport`` — ship (site, tiles) measurements to a fleet of
+remote ``serve-worker`` hosts over TCP.
+
+The cross-host half of the :class:`~repro.core.protocols.MeasureTransport`
+contract: scheduling semantics are identical to
+:class:`~repro.measure.pool.WorkerPoolTransport` (non-blocking
+``submit``, DB hits resolve instantly, duplicate keys coalesce, failures
+fail closed to ``inf`` with attempts-exhausted quarantine), but the
+"worker" under each dispatcher thread is a whole remote host speaking
+the :mod:`repro.fleet.worker_server` protocol instead of a subprocess
+pipe.
+
+Per-host mechanics:
+
+* **handshake** — each connection opens with hello/welcome; the first
+  host's ``backend`` fingerprint becomes the fleet's, and any host whose
+  fingerprint disagrees is *rejected* permanently (mixed measurement
+  conditions would poison the shared DB).  ``welcome.slots`` advertises
+  the host's local parallelism; the dispatcher keeps at most that many
+  jobs in flight on the connection (pipelined — the host's inner pool
+  measures them concurrently).
+* **reconnect with backoff** — a lost connection requeues every
+  windowed job (each loss costs the jobs one attempt) and reconnects on
+  the jittered :func:`~repro.measure.pool.respawn_backoff` schedule; a
+  host that refuses ``max_connect_failures`` consecutive connects is
+  given up on.  Re-sent jobs never double-time: the server answers
+  repeats from its completed-results cache (and the shared DB).
+* **health** — ``ok`` with every host connected, ``degraded`` while any
+  host is down/backing off/rejected (work continues on the rest),
+  ``down`` when closed or no dispatcher survives — at which point
+  pending jobs fail closed so ``drain()`` never hangs, and the
+  oracle-level circuit breaker (via ``resolve_health``) degrades tuning
+  to the analytic model exactly as for a dead local pool.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import asdict
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.fleet import rpc
+from repro.fleet.rpc import PROTO_VERSION, format_address, parse_address
+from repro.measure.db import make_key
+from repro.measure.pool import _Job, respawn_backoff
+from repro.measure.transport import _TransportStats, _resolved
+
+
+class _BackendMismatch(RuntimeError):
+    """A host's measurement fingerprint disagrees with the fleet's."""
+
+
+class _HostLink:
+    """Mutable per-host record (guarded by the transport's lock)."""
+
+    __slots__ = ("index", "address", "name", "state", "failures",
+                 "reconnects", "jobs_done", "error")
+
+    def __init__(self, index: int, address):
+        self.index = index
+        host, port = parse_address(address)
+        self.address = (host, port)
+        self.name = format_address(host, port)
+        self.state = "connecting"   # connecting|backing_off|connected|
+        #                             rejected|gone|closed
+        self.failures = 0           # consecutive failed connects
+        self.reconnects = 0         # connections lost mid-serve
+        self.jobs_done = 0
+        self.error: Optional[str] = None
+
+
+class SocketTransport:
+    """Remote measurement fleet behind the MeasureTransport contract.
+
+    Parameters
+    ----------
+    hosts:          ``serve-worker`` addresses (``"host:port"`` strings
+                    or ``(host, port)`` pairs) — one dispatcher thread
+                    each.
+    db:             a :class:`~repro.measure.db.MeasureDB` (or
+                    compatible remote store), a path for one —
+                    ``fleet://host:port`` names a ``serve-artifacts``
+                    service — or ``None``.  The *client* owns the
+                    exactly-once DB write discipline, same as the pool.
+    max_attempts:   total tries per job before failing closed to ``inf``
+                    (a try is consumed each time a connection dies
+                    holding the job).
+    connect_timeout: seconds per connect+handshake attempt; also how
+                    long the constructor waits for the first live host.
+    job_timeout:    seconds a host may hold the *oldest* windowed job
+                    before the connection is treated as wedged (torn
+                    down + jobs requeued; ``None`` = unlimited).
+    max_connect_failures: consecutive failed connects before a host is
+                    given up on for the transport's lifetime.
+    backoff_base / backoff_cap / backoff_seed:
+                    the reconnect backoff schedule; each dispatcher
+                    jitters from ``backoff_seed + its index``.
+    """
+
+    def __init__(self, hosts: Sequence, db=None, max_attempts: int = 3,
+                 connect_timeout: float = 60.0,
+                 job_timeout: Optional[float] = 900.0,
+                 max_connect_failures: int = 5,
+                 backoff_base: float = 0.1, backoff_cap: float = 30.0,
+                 backoff_seed: int = 0):
+        hosts = list(hosts)
+        if not hosts:
+            raise ValueError("hosts must name at least one serve-worker "
+                             "address, e.g. ['127.0.0.1:7761']")
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        if max_connect_failures < 1:
+            raise ValueError(f"max_connect_failures must be >= 1, got "
+                             f"{max_connect_failures}")
+        if isinstance(db, str):
+            from repro.measure.db import open_measure_db
+            db = open_measure_db(db)
+        self.db = db
+        self.max_attempts = max_attempts
+        self.connect_timeout = connect_timeout
+        self.job_timeout = job_timeout
+        self.max_connect_failures = max_connect_failures
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.backoff_seed = backoff_seed
+        self._sleep = time.sleep        # seam: fake clock in backoff tests
+
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: "deque[_Job]" = deque()
+        self._inflight: dict = {}       # key -> _Job (queued or in a window)
+        self._stats = _TransportStats()
+        self._closing = False
+        self._backend: Optional[str] = None
+        self._links = [_HostLink(i, h) for i, h in enumerate(hosts)]
+        self._live = len(self._links)   # dispatcher threads still running
+        self._ready_hosts = 0           # links currently connected
+        self._backing_off = 0
+        self._first_error: Optional[BaseException] = None
+        self.reconnects = 0             # connections lost mid-serve, total
+        self.queue_wait_seconds = 0.0
+        self.run_seconds = 0.0
+        self.jobs_finished = 0
+        self.job_observer = None
+
+        self._threads = [
+            threading.Thread(target=self._dispatch, args=(i,),
+                             name=f"fleet-h{i}", daemon=True)
+            for i in range(len(self._links))]
+        for t in self._threads:
+            t.start()
+        # Unlike the pool (which requires its full worker complement),
+        # a fleet starts as soon as ONE host answers: a missing host is
+        # the degraded-but-working case, an empty fleet is an error.
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self._ready_hosts > 0 or self._live == 0,
+                timeout=connect_timeout)
+            dead = self._live == 0 and self._ready_hosts == 0
+            err = self._first_error
+            if dead or not ok:
+                self._closing = True
+                self._cv.notify_all()
+        if dead:
+            raise RuntimeError(
+                "fleet failed to start: no serve-worker host reachable"
+            ) from err
+        if not ok:
+            raise TimeoutError(
+                f"fleet: no host completed the handshake within "
+                f"{connect_timeout}s")
+
+    # -- per-host dispatcher thread ---------------------------------------
+
+    def _dispatch(self, index: int) -> None:
+        link = self._links[index]
+        try:
+            while True:
+                with self._cv:
+                    if self._closing:
+                        return
+                try:
+                    stream, slots = self._connect(link)
+                except _BackendMismatch as e:
+                    with self._cv:
+                        link.state = "rejected"
+                        link.error = str(e)
+                        if self._first_error is None:
+                            self._first_error = e
+                        self._cv.notify_all()
+                    return
+                except (OSError, EOFError, ValueError, RuntimeError) as e:
+                    with self._cv:
+                        link.failures += 1
+                        link.error = f"{type(e).__name__}: {e}"
+                        if self._first_error is None:
+                            self._first_error = e
+                        give_up = link.failures >= self.max_connect_failures
+                        link.state = "gone" if give_up else "backing_off"
+                        if not give_up:
+                            self._backing_off += 1
+                        self._cv.notify_all()
+                    if give_up:
+                        return
+                    try:
+                        self._backoff_sleep(respawn_backoff(
+                            link.failures, base=self.backoff_base,
+                            cap=self.backoff_cap,
+                            seed=self.backoff_seed + index))
+                    finally:
+                        with self._cv:
+                            self._backing_off -= 1
+                    continue
+                with self._cv:
+                    link.failures = 0
+                    link.error = None
+                    link.state = "connected"
+                    self._ready_hosts += 1
+                    self._cv.notify_all()
+                try:
+                    clean = self._serve(link, stream, slots)
+                finally:
+                    with self._cv:
+                        self._ready_hosts -= 1
+                        if link.state == "connected":
+                            link.state = "connecting"
+                if clean:
+                    try:
+                        stream.write({"type": "bye"})
+                    except (OSError, ValueError):
+                        pass
+                    stream.close()
+                    return
+                stream.close()
+        finally:
+            with self._cv:
+                if link.state not in ("rejected", "gone"):
+                    link.state = "closed" if self._closing else "gone"
+                self._live -= 1
+                if self._live == 0:
+                    # no dispatcher survives: fail queued jobs closed so
+                    # drain() never hangs (fleet-down, not a bad pair —
+                    # nothing is quarantined)
+                    while self._pending:
+                        self._requeue_or_fail(self._pending.popleft(),
+                                              hard=True)
+                self._cv.notify_all()
+
+    def _connect(self, link: _HostLink):
+        stream = rpc.connect(link.address, timeout=self.connect_timeout)
+        try:
+            stream.settimeout(self.connect_timeout)
+            stream.write({"type": "hello", "role": "measure",
+                          "proto": PROTO_VERSION})
+            welcome = stream.read()
+            if not isinstance(welcome, dict) \
+                    or welcome.get("type") != "welcome":
+                raise RuntimeError(f"fleet handshake failed: {welcome!r}")
+            backend = welcome.get("backend") or "unknown"
+            with self._cv:
+                if self._backend is None:
+                    self._backend = backend     # first host wins
+                elif self._backend != backend:
+                    raise _BackendMismatch(
+                        f"host {link.name} backend {backend!r} != fleet "
+                        f"backend {self._backend!r} — mixed measurement "
+                        f"conditions would poison the DB")
+            slots = max(1, int(welcome.get("slots", 1)))
+            return stream, slots
+        except BaseException:
+            stream.close()
+            raise
+
+    def _serve(self, link: _HostLink, stream, slots: int) -> bool:
+        """Feed the connection a window of up to ``slots`` jobs, reading
+        results as they complete.  ``True`` = clean shutdown; ``False``
+        = connection lost (windowed jobs already requeued)."""
+        window: "dict[int, _Job]" = {}
+        next_id = 0
+        while True:
+            to_send = []
+            with self._cv:
+                if self._closing and not self._pending and not window:
+                    return True
+                while len(window) < slots and self._pending:
+                    job = self._pending.popleft()
+                    job.queue_wait_s += time.monotonic() - job.t_queued
+                    job.t_start = time.monotonic()
+                    next_id += 1
+                    window[next_id] = job
+                    to_send.append((next_id, job))
+                if not to_send and not window:
+                    self._cv.wait_for(lambda: self._pending or self._closing)
+                    continue
+            try:
+                for jid, job in to_send:
+                    stream.write({"type": "job", "id": jid, "key": job.key,
+                                  "site": asdict(job.site),
+                                  "tiles": job.tiles})
+                if not window:
+                    continue
+                msg = self._read_result(stream, window)
+                if msg is None:
+                    raise EOFError("host closed the connection")
+            except (OSError, EOFError, ValueError) as e:
+                reason = "host wedged (job timeout)" \
+                    if isinstance(e, TimeoutError) \
+                    else f"connection lost ({type(e).__name__})"
+                with self._cv:
+                    link.reconnects += 1
+                    self.reconnects += 1
+                    for job in window.values():
+                        self._requeue_or_fail(job, reason=reason)
+                    self._cv.notify_all()
+                return False
+            if msg.get("type") != "result":
+                continue                # pong / forward-compat frames
+            job = window.pop(msg.get("id"), None)
+            if job is None:
+                continue                # stale id — already requeued
+            v = float("inf") if msg.get("v") is None else float(msg["v"])
+            with self._cv:
+                link.jobs_done += 1
+            self._resolve(job, v)
+
+    def _read_result(self, stream, window: dict):
+        """One frame, bounded by the oldest windowed job's deadline."""
+        if self.job_timeout is not None:
+            oldest = min(j.t_start for j in window.values())
+            remaining = (oldest + self.job_timeout) - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError("host did not answer before the "
+                                   "deadline (wedged measurement?)")
+            stream.settimeout(remaining)
+        else:
+            stream.settimeout(None)
+        return stream.read()
+
+    def _backoff_sleep(self, delay: float) -> None:
+        """Sleep out a reconnect backoff in small slices so ``close()``
+        is never stuck behind a long schedule."""
+        deadline = time.monotonic() + delay
+        while True:
+            with self._cv:
+                if self._closing:
+                    return
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return
+            self._sleep(min(0.1, remaining))
+
+    # -- shared job accounting (mirrors WorkerPoolTransport) ---------------
+
+    # call with self._lock held
+    def _account(self, job: _Job) -> None:
+        run_s = 0.0 if job.t_start is None \
+            else time.monotonic() - job.t_start
+        self.queue_wait_seconds += job.queue_wait_s
+        self.run_seconds += run_s
+        self.jobs_finished += 1
+        obs = self.job_observer
+        if obs is not None:
+            try:
+                obs(job.queue_wait_s, run_s)
+            except Exception:
+                pass                    # telemetry must never fail a job
+
+    # call with self._lock held
+    def _requeue_or_fail(self, job: Optional[_Job], hard: bool = False,
+                         reason: str = "connection lost") -> None:
+        if job is None:
+            return
+        job.attempts += 1
+        if hard or job.attempts >= self.max_attempts:
+            if not hard and self.db is not None:
+                self.db.quarantine(job.key, job.attempts, reason)
+            self._stats.failed_pairs += 1
+            self._inflight.pop(job.key, None)
+            self._account(job)
+            job.future.set_result(float("inf"))
+        else:
+            self._stats.retries += 1
+            job.t_queued = time.monotonic()
+            job.t_start = None
+            self._pending.append(job)
+
+    def _resolve(self, job: _Job, v: float) -> None:
+        with self._cv:
+            if self.db is not None:
+                self.db.put(job.key, v)
+            if np.isfinite(v):
+                self._stats.timed_pairs += 1
+            else:
+                self._stats.failed_pairs += 1
+            self._inflight.pop(job.key, None)
+            self._account(job)
+            job.future.set_result(v)
+            self._cv.notify_all()
+
+    # -- MeasureTransport surface ------------------------------------------
+
+    @property
+    def backend_key(self) -> str:
+        return self._backend or "unknown"
+
+    def submit(self, sites: Sequence, tiles) -> list:
+        tiles = np.asarray(tiles, np.int64)
+        futs: list = [None] * len(sites)
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("submit on a closed transport")
+            backend = self.backend_key
+            for i, (s, t) in enumerate(zip(sites, tiles)):
+                key = make_key(s.key(), t, backend)
+                v = self.db.get(key) if self.db is not None else None
+                if v is not None:
+                    self._stats.hits += 1
+                    futs[i] = _resolved(v)
+                elif key in self._inflight:
+                    self._stats.coalesced += 1
+                    futs[i] = self._inflight[key].future
+                elif self._live == 0:
+                    # every dispatcher is gone (fleet down, not closed):
+                    # nothing will ever service the queue, so fail the
+                    # pair closed now instead of hanging drain()
+                    self._stats.misses += 1
+                    self._stats.failed_pairs += 1
+                    futs[i] = _resolved(float("inf"))
+                else:
+                    job = _Job(key, s, t)
+                    self._stats.misses += 1
+                    self._inflight[key] = job
+                    self._pending.append(job)
+                    futs[i] = job.future
+            self._cv.notify_all()
+        return futs
+
+    def drain(self) -> None:
+        with self._cv:
+            self._cv.wait_for(lambda: not self._inflight)
+
+    def close(self) -> None:
+        if self._closing:
+            return
+        self.drain()
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=30)
+        if self.db is not None:
+            self.db.close()
+
+    def health(self) -> str:
+        """``ok`` — every host connected; ``degraded`` — at least one
+        host down/backing off/rejected (the rest keep measuring);
+        ``down`` — closed, or no dispatcher survives."""
+        with self._cv:
+            return self._health_locked()
+
+    def _health_locked(self) -> str:
+        if self._closing or self._live == 0:
+            return "down"
+        if self._backing_off or self._ready_hosts < len(self._links):
+            return "degraded"
+        return "ok"
+
+    def host_states(self) -> dict:
+        """``{address: state}`` — the per-host view obs labels on."""
+        with self._cv:
+            return {l.name: l.state for l in self._links}
+
+    def stats(self) -> dict:
+        """Transport counters + fleet-specific keys (unified
+        ``fleet_<noun>_<unit>`` naming; ``hosts`` is the per-host
+        breakdown obs attaches labels from)."""
+        with self._cv:
+            s = self._stats.snapshot(in_flight=len(self._inflight))
+            s["health"] = self._health_locked()
+            s["fleet_hosts_count"] = len(self._links)
+            s["fleet_hosts_live"] = self._ready_hosts
+            s["fleet_reconnects_total"] = self.reconnects
+            s["fleet_queue_depth"] = len(self._pending)
+            s["fleet_queue_wait_seconds_total"] = self.queue_wait_seconds
+            s["fleet_run_seconds_total"] = self.run_seconds
+            s["fleet_jobs_finished_total"] = self.jobs_finished
+            s["hosts"] = {
+                l.name: {"state": l.state, "jobs_done": l.jobs_done,
+                         "reconnects": l.reconnects,
+                         "connect_failures": l.failures}
+                for l in self._links}
+        s["quarantined"] = s["fleet_quarantined_total"] = \
+            getattr(self.db, "n_quarantined", 0) if self.db is not None else 0
+        return s
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,153 @@
+"""``fleet serve-worker`` — a measurement host daemon.
+
+Wraps a *local* transport (``InProcessTransport`` or
+``WorkerPoolTransport``) and serves its measurements over TCP with the
+:mod:`repro.measure.wire` framing.  The per-connection protocol mirrors
+the worker pipe protocol one level up:
+
+    client →  ``{"type": "hello", "role": "measure", "proto": 1}``
+    server →  ``{"type": "welcome", "backend": ..., "slots": N, ...}``
+    client →  ``{"type": "job", "id": n, "key": k,
+                 "site": {...}, "tiles": [a, b, c]}``
+    server →  ``{"type": "result", "id": n, "v": seconds | null}``
+    client →  ``{"type": "bye"}`` or EOF → connection closes
+
+``welcome.backend`` is the host's measurement-conditions fingerprint —
+the client rejects hosts whose fingerprint disagrees with the fleet's.
+``welcome.slots`` advertises local parallelism (pool size, or 1 for
+in-process); the client keeps at most that many jobs in flight per host,
+and results stream back in completion order via future callbacks — no
+extra server threads, natural pipelining.
+
+Jobs are idempotent by ``key``: every finished measurement lands in a
+bounded completed-results cache, so a job re-sent after a connection
+loss (client never saw the result) answers from the cache instead of
+re-timing the kernel.  With a :class:`~repro.measure.db.MeasureDB`
+attached to the inner transport the DB provides the same guarantee
+durably; the cache covers DB-less hosts and the
+measured-but-undelivered window.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.fleet.rpc import PROTO_VERSION, FrameServer, SocketStream
+
+#: Completed-results cache bound — plenty for any tuning run's key set
+#: while keeping a long-lived daemon's footprint flat.
+DONE_CACHE_MAX = 65536
+
+
+def _site(d: dict):
+    from repro.models.compute import KernelSite
+    return KernelSite(**d)
+
+
+def _wire_value(v) -> "float | None":
+    v = float(v)
+    return None if not math.isfinite(v) else v
+
+
+class MeasureServer(FrameServer):
+    """Serve a local :class:`MeasureTransport` to remote fleet clients.
+
+    Borrows ``transport`` (the caller/CLI owns its lifecycle).  One
+    server handles any number of client connections; duplicate keys
+    across clients coalesce inside the inner transport exactly as they
+    would for local callers.
+    """
+
+    def __init__(self, transport, host: str = "127.0.0.1", port: int = 0,
+                 slots: "int | None" = None):
+        super().__init__(host=host, port=port)
+        self.transport = transport
+        self.slots = int(slots if slots is not None
+                         else max(1, getattr(transport, "workers", 1)))
+        self._done_lock = threading.Lock()
+        self._done: "OrderedDict[str, float]" = OrderedDict()
+
+    # -- idempotency cache ------------------------------------------------
+
+    def _done_get(self, key):
+        if not key:
+            return None
+        with self._done_lock:
+            return self._done.get(key)
+
+    def _done_put(self, key, v: float) -> None:
+        if not key:
+            return
+        with self._done_lock:
+            self._done[key] = float(v)
+            self._done.move_to_end(key)
+            while len(self._done) > DONE_CACHE_MAX:
+                self._done.popitem(last=False)
+
+    # -- per-connection protocol ------------------------------------------
+
+    def handle(self, stream: SocketStream) -> None:
+        hello = stream.read()
+        if not isinstance(hello, dict) or hello.get("type") != "hello":
+            return
+        if hello.get("proto", PROTO_VERSION) != PROTO_VERSION:
+            stream.write({"type": "error",
+                          "error": f"unsupported proto {hello.get('proto')}"})
+            return
+        wlock = threading.Lock()
+        with wlock:
+            stream.write({"type": "welcome", "role": "measure",
+                          "proto": PROTO_VERSION,
+                          "backend": self.transport.backend_key,
+                          "slots": self.slots})
+        while True:
+            msg = stream.read()
+            if msg is None or msg.get("type") == "bye":
+                return
+            kind = msg.get("type")
+            if kind == "job":
+                self._handle_job(stream, wlock, msg)
+            elif kind == "ping":
+                self._send(stream, wlock,
+                           {"type": "pong",
+                            "health": self.transport.health()})
+            # unknown frame types are ignored — forward compatibility
+
+    def _handle_job(self, stream, wlock, msg) -> None:
+        jid, key = msg.get("id"), msg.get("key")
+        cached = self._done_get(key)
+        if cached is not None:
+            self._send(stream, wlock,
+                       {"type": "result", "id": jid,
+                        "v": _wire_value(cached), "cached": True})
+            return
+        try:
+            site = _site(msg["site"])
+            tiles = np.asarray([msg["tiles"]])
+            [fut] = self.transport.submit([site], tiles)
+        except Exception:
+            # malformed site / transport closed under us — fail the job
+            # closed; the client resolves inf or retries elsewhere
+            self._send(stream, wlock,
+                       {"type": "result", "id": jid, "v": None})
+            return
+        fut.add_done_callback(
+            lambda f, jid=jid, key=key: self._reply(stream, wlock, jid,
+                                                    key, f))
+
+    def _reply(self, stream, wlock, jid, key, fut) -> None:
+        v = fut.result()  # transports never raise out of result()
+        self._done_put(key, v)
+        self._send(stream, wlock,
+                   {"type": "result", "id": jid, "v": _wire_value(v)})
+
+    @staticmethod
+    def _send(stream, wlock, msg) -> None:
+        try:
+            with wlock:
+                stream.write(msg)
+        except (OSError, ValueError):
+            pass  # client gone mid-reply; it will reconnect and retry

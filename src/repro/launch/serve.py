@@ -16,7 +16,10 @@ TPU/GPU, interpret-mode with capped shapes on CPU) and ``--measure-db
 PATH`` persists the timings so repeat invocations re-time nothing.
 ``--transport pool --workers N`` fans the measurements out to N
 subprocess workers (the ``WorkerPoolTransport``) instead of timing in
-this process.
+this process; ``--transport socket --hosts a:7761,b:7761`` ships them to
+remote ``python -m repro.fleet serve-worker`` daemons instead
+(``repro.fleet``; a ``fleet://host:port`` ``--measure-db`` attaches the
+shared artifact service).
 
 Warm starts (``repro.artifacts``): ``--agent-ckpt DIR`` restores a
 fitted agent saved by ``nv.save()``/``save_agent`` and skips the fit
@@ -78,9 +81,14 @@ def _tile_plan(args, model, params, batch, cache):
                              transport=args.transport,
                              workers=(args.workers
                                       if args.transport == "pool" else None),
+                             hosts=(args.hosts.split(",")
+                                    if args.transport == "socket" else None),
                              prune_topk=args.prune_topk,
-                             surrogate=args.surrogate,
-                             oracle_kwargs=dict(reps=args.measure_reps))
+                             surrogate=args.surrogate)
+            if args.transport != "socket":
+                # serve-worker hosts own their runner config; reps= on the
+                # client would be rejected by make_transport
+                oracle_kw["oracle_kwargs"] = dict(reps=args.measure_reps)
         nv = api.NeuroVectorizer(agent=args.autotune,
                                  program_store=args.program_store,
                                  trace=args.trace_out,
@@ -161,12 +169,17 @@ def main(argv=None):
     ap.add_argument("--surrogate", default=None,
                     help="surrogate checkpoint directory for --prune-topk "
                          "(default: train from the measurement DB)")
-    ap.add_argument("--transport", choices=("inproc", "pool"),
+    ap.add_argument("--transport", choices=("inproc", "pool", "socket"),
                     default="inproc",
-                    help="how measurements execute: this process, or a "
-                         "subprocess worker pool (repro.measure)")
+                    help="how measurements execute: this process, a "
+                         "subprocess worker pool (repro.measure), or a "
+                         "remote serve-worker fleet (repro.fleet)")
     ap.add_argument("--workers", type=int, default=2,
                     help="pool size for --transport pool")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated serve-worker host:port list for "
+                         "--transport socket (start them with "
+                         "`python -m repro.fleet serve-worker`)")
     ap.add_argument("--agent-ckpt", default=None,
                     help="warm-start --autotune from a saved agent "
                          "artifact directory (repro.artifacts; skips fit)")
@@ -207,6 +220,11 @@ def main(argv=None):
         ap.error("--surrogate applies only with --prune-topk")
     if args.workers < 1:
         ap.error(f"--workers must be >= 1, got {args.workers}")
+    if args.transport == "socket" and not args.hosts:
+        ap.error("--transport socket needs --hosts host:port[,host:port...] "
+                 "naming the serve-worker daemons")
+    if args.hosts and args.transport != "socket":
+        ap.error("--hosts applies only to --transport socket")
     if args.trace_out and not args.autotune:
         ap.error("--trace-out records the tuning span tree: pass "
                  "--autotune (loading --tiles produces no spans)")
@@ -215,8 +233,11 @@ def main(argv=None):
                  f"{args.metrics_port}")
     if args.measured:
         workers = args.workers if args.transport == "pool" else "-"
+        reps = args.measure_reps if args.transport != "socket" else "-"
+        where = (f"hosts={args.hosts}" if args.transport == "socket"
+                 else f"workers={workers}")
         print(f"[serve] measured oracle: transport={args.transport} "
-              f"workers={workers} reps={args.measure_reps} "
+              f"{where} reps={reps} "
               f"db={args.measure_db or '-'}")
 
     metrics_srv = None

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 from typing import Optional, Union
 
-from repro.measure.db import MeasureDB, make_key
+from repro.measure.db import MeasureDB, make_key, open_measure_db
 from repro.measure.faults import (ChaosRunner, FaultInjectionTransport,
                                   FaultSchedule)
 from repro.measure.pool import WorkerPoolTransport, respawn_backoff
@@ -46,9 +46,10 @@ from repro.measure.transport import (CachedMeasureFn, InProcessTransport,
                                      TransportMeasureFn)
 from repro.measure import timing
 
-TRANSPORT_NAMES = ("inproc", "pool")
+TRANSPORT_NAMES = ("inproc", "pool", "socket")
 
 __all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
+           "open_measure_db",
            "InProcessTransport", "WorkerPoolTransport", "TransportMeasureFn",
            "TRANSPORT_NAMES", "make_transport", "make_measured_env",
            "resolve_surrogate",
@@ -60,18 +61,26 @@ __all__ = ["MeasureRunner", "MeasureDB", "CachedMeasureFn", "make_key",
 def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,
                    db: Optional[MeasureDB] = None,
                    runner: Optional[MeasureRunner] = None,
-                   workers: Optional[int] = None, **runner_kwargs):
+                   workers: Optional[int] = None,
+                   hosts=None, **runner_kwargs):
     """Build a :class:`~repro.core.protocols.MeasureTransport` by name.
 
     ``"inproc"`` — the calling process measures (``workers`` must be
     unset); ``"pool"`` — ``workers`` subprocess workers (default 2), each
-    building its own :class:`MeasureRunner` from ``runner_kwargs``.
-    ``db_path``/``db`` attach the persistent timing store either way.
+    building its own :class:`MeasureRunner` from ``runner_kwargs``;
+    ``"socket"`` — a :class:`~repro.fleet.transport.SocketTransport`
+    fanning out to the remote ``serve-worker`` daemons named by
+    ``hosts=["host:port", ...]`` (runner configuration lives on those
+    hosts, not here).  ``db_path``/``db`` attach the persistent timing
+    store either way — ``db_path="fleet://host:port"`` attaches the
+    shared artifact service.
     """
     if db is not None and db_path is not None:
         raise TypeError("pass either db= or db_path=, not both")
     if db is None and db_path:
-        db = MeasureDB(db_path)
+        db = open_measure_db(db_path)
+    if hosts is not None and name != "socket":
+        raise ValueError("hosts= applies only to transport='socket'")
     if name == "inproc":
         if workers is not None:
             raise ValueError("workers= applies only to transport='pool'")
@@ -88,6 +97,21 @@ def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,
         return WorkerPoolTransport(
             workers=workers if workers is not None else 2,
             db=db, runner_kwargs=runner_kwargs)
+    if name == "socket":
+        if not hosts:
+            raise ValueError("transport='socket' needs hosts=['host:port', "
+                             "...] naming the serve-worker daemons")
+        if workers is not None:
+            raise ValueError("workers= applies only to transport='pool' "
+                             "(each serve-worker host sets its own pool "
+                             "size)")
+        if runner is not None or runner_kwargs:
+            raise TypeError("transport='socket' measures on the "
+                            "serve-worker hosts — runner configuration "
+                            "(runner=, reps=, interpret=, ...) belongs "
+                            "there, not on the client")
+        from repro.fleet import SocketTransport
+        return SocketTransport(hosts, db=db)
     raise ValueError(f"unknown transport {name!r}; "
                      f"registered: {', '.join(TRANSPORT_NAMES)}")
 
@@ -95,17 +119,20 @@ def make_transport(name: str = "inproc", *, db_path: Optional[str] = None,
 def make_measured_env(cfg=None, db_path: Optional[str] = None,
                       runner: Optional[MeasureRunner] = None,
                       seed: int = 0, transport: Union[str, object, None] = None,
-                      workers: Optional[int] = None,
+                      workers: Optional[int] = None, hosts=None,
                       prune_topk: Optional[int] = None,
                       surrogate=None, **runner_kwargs):
     """A :class:`~repro.core.env.MeasuredEnv` wired to a real measurement
     stack.
 
     ``db_path`` enables the persistent timing DB (a second run against the
-    same path performs zero timings); ``transport`` selects how timings
-    execute — ``None``/``"inproc"`` (this process), ``"pool"`` with
-    ``workers=N`` (subprocess pool), or a pre-built
-    :class:`~repro.core.protocols.MeasureTransport`.  Extra kwargs
+    same path performs zero timings; a ``fleet://host:port`` path
+    attaches the shared artifact service); ``transport`` selects how
+    timings execute — ``None``/``"inproc"`` (this process), ``"pool"``
+    with ``workers=N`` (subprocess pool), ``"socket"`` with
+    ``hosts=["host:port", ...]`` (remote serve-worker fleet), or a
+    pre-built :class:`~repro.core.protocols.MeasureTransport`.  Extra
+    kwargs
     construct the :class:`MeasureRunner` (``reps=``, ``warmup=``,
     ``interpret=``, ``max_dim=``...) — per worker under the pool.  The
     assembled hook is reachable as ``env.measure_fn``
@@ -126,12 +153,14 @@ def make_measured_env(cfg=None, db_path: Optional[str] = None,
 
     if transport is None or isinstance(transport, str):
         t = make_transport(transport or "inproc", db_path=db_path,
-                           runner=runner, workers=workers, **runner_kwargs)
+                           runner=runner, workers=workers, hosts=hosts,
+                           **runner_kwargs)
     else:
         if db_path is not None or runner is not None or workers is not None \
-                or runner_kwargs:
+                or hosts is not None or runner_kwargs:
             raise TypeError("a pre-built transport carries its own "
-                            "runner/db/workers — drop the extra arguments")
+                            "runner/db/workers/hosts — drop the extra "
+                            "arguments")
         t = transport
     fn = (CachedMeasureFn(t) if isinstance(t, InProcessTransport)
           else TransportMeasureFn(t))

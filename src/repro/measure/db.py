@@ -213,6 +213,21 @@ class MeasureDB:
         return key in self._mem
 
 
+def open_measure_db(path: str, **kwargs):
+    """:class:`MeasureDB` factory that understands fleet addresses.
+
+    A ``fleet://host:port`` path opens a
+    :class:`~repro.fleet.artifacts.RemoteMeasureDB` — a live,
+    push-invalidated mirror of the shared ``serve-artifacts`` timing
+    store — so every ``db_path=`` string in facade/service/serve can
+    name a fleet service with zero caller changes.  Anything else is a
+    local JSONL path."""
+    if isinstance(path, str) and path.startswith("fleet://"):
+        from repro.fleet import RemoteMeasureDB
+        return RemoteMeasureDB(path)
+    return MeasureDB(path, **kwargs)
+
+
 def __getattr__(name):
     # CachedMeasureFn moved to repro.measure.transport (it is a shim over
     # InProcessTransport now); keep the historical import path working

@@ -51,7 +51,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.measure.db import MeasureDB, make_key
+from repro.measure.db import make_key
 from repro.measure.transport import _TransportStats, _resolved
 from repro.measure.wire import read_frame, write_frame
 
@@ -148,7 +148,10 @@ class WorkerPoolTransport:
         if max_attempts < 1:
             raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
         self.workers = workers
-        self.db = MeasureDB(db) if isinstance(db, str) else db
+        if isinstance(db, str):
+            from repro.measure.db import open_measure_db
+            db = open_measure_db(db)    # fleet:// paths open remote mirrors
+        self.db = db
         self.runner_kwargs = dict(runner_kwargs or {})
         self.max_attempts = max_attempts
         self.factory = factory
@@ -429,6 +432,13 @@ class WorkerPoolTransport:
                 elif key in self._inflight:
                     self._stats.coalesced += 1
                     futs[i] = self._inflight[key].future
+                elif self._live == 0:
+                    # every dispatcher is gone (pool down, not closed):
+                    # nothing will ever service the queue, so fail the
+                    # pair closed now instead of hanging drain()
+                    self._stats.misses += 1
+                    self._stats.failed_pairs += 1
+                    futs[i] = _resolved(float("inf"))
                 else:
                     job = _Job(key, s, t)
                     self._stats.misses += 1

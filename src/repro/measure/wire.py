@@ -1,10 +1,17 @@
 """Length-prefixed JSON framing — the wire format of the worker-pool
-pipe protocol (and the seam a future socket transport reuses).
+pipe protocol and the :mod:`repro.fleet` socket protocol.
 
 Every frame is ``len(payload)`` as a 4-byte big-endian prefix followed by
 the UTF-8 JSON payload.  Shared by :mod:`repro.measure.pool` (parent
-side) and :mod:`repro.measure.worker` (child side) — kept free of heavy
-imports so the worker entrypoint stays cheap to load.
+side), :mod:`repro.measure.worker` (child side), and the fleet
+client/servers — kept free of heavy imports so the worker entrypoint
+stays cheap to load.
+
+A frame payload is capped at :data:`MAX_FRAME_BYTES`: a torn or garbage
+header decodes to an arbitrary 32-bit length (``b"garb"`` ≈ 1.7 GB), and
+without the cap a reader would attempt that allocation before noticing
+the stream is ruined.  Oversize prefixes raise ``ValueError`` — the same
+exception class readers already treat as a poisoned-connection signal.
 """
 from __future__ import annotations
 
@@ -13,22 +20,44 @@ import struct
 
 _LEN = struct.Struct(">I")
 
+#: Hard ceiling on a single frame's JSON payload.  Far above any real
+#: message (jobs/results are < 1 KB; a full artifact-store sync of ~1e5
+#: records is a few MB) yet small enough that a garbage length prefix is
+#: rejected instead of driving a multi-GB read.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
 
-def read_frame(stream) -> "dict | None":
-    """One length-prefixed JSON frame; ``None`` on clean EOF."""
+
+def read_frame(stream, max_bytes: int = MAX_FRAME_BYTES) -> "dict | None":
+    """One length-prefixed JSON frame; ``None`` on clean EOF.
+
+    Raises ``EOFError`` on a truncated header/payload and ``ValueError``
+    on a length prefix beyond ``max_bytes`` (garbage/torn header) or a
+    payload that is not valid UTF-8 JSON.
+    """
     head = stream.read(_LEN.size)
     if not head:
         return None
     if len(head) < _LEN.size:
         raise EOFError("truncated frame header")
     (n,) = _LEN.unpack(head)
+    if n > max_bytes:
+        raise ValueError(
+            f"frame length {n} exceeds cap {max_bytes} — garbage or torn "
+            f"header")
     payload = stream.read(n)
     if len(payload) < n:
         raise EOFError("truncated frame payload")
-    return json.loads(payload.decode("utf-8"))
+    try:
+        return json.loads(payload.decode("utf-8"))
+    except UnicodeDecodeError as e:  # surface as the poisoned-stream class
+        raise ValueError(f"frame payload is not UTF-8: {e}") from e
 
 
-def write_frame(stream, msg: dict) -> None:
+def write_frame(stream, msg: dict, max_bytes: int = MAX_FRAME_BYTES) -> None:
     payload = json.dumps(msg).encode("utf-8")
+    if len(payload) > max_bytes:
+        raise ValueError(
+            f"refusing to write a {len(payload)}-byte frame (cap "
+            f"{max_bytes})")
     stream.write(_LEN.pack(len(payload)) + payload)
     stream.flush()

@@ -16,8 +16,8 @@ registry (:func:`get_registry`); tracing is opt-in
 """
 from repro.obs.exporter import MetricsServer
 from repro.obs.instrument import (ObsHandle, instrument_db, instrument_env,
-                                  instrument_oracle_stack, instrument_pool,
-                                  instrument_program_store,
+                                  instrument_fleet, instrument_oracle_stack,
+                                  instrument_pool, instrument_program_store,
                                   instrument_surrogate, instrument_transport)
 from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
                                Histogram, MetricsRegistry, get_registry)
@@ -30,7 +30,8 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Span", "read_trace",
     "to_chrome_trace",
     "MetricsServer",
-    "ObsHandle", "instrument_transport", "instrument_pool", "instrument_db",
+    "ObsHandle", "instrument_transport", "instrument_pool",
+    "instrument_fleet", "instrument_db",
     "instrument_env", "instrument_surrogate", "instrument_program_store",
     "instrument_oracle_stack",
     "resolve_obs",

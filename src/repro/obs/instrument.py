@@ -35,8 +35,8 @@ from .metrics import MetricsRegistry
 from .trace import NULL_TRACER
 
 __all__ = ["ObsHandle", "instrument_transport", "instrument_pool",
-           "instrument_db", "instrument_env", "instrument_surrogate",
-           "instrument_program_store"]
+           "instrument_fleet", "instrument_db", "instrument_env",
+           "instrument_surrogate", "instrument_program_store"]
 
 _MARK = "_obs_instrumented"
 
@@ -177,6 +177,7 @@ def instrument_transport(transport, registry: MetricsRegistry,
 
     h.add_collector(collect)
     h.adopt(instrument_pool(transport, registry))
+    h.adopt(instrument_fleet(transport, registry))
     if getattr(transport, "db", None) is not None:
         h.adopt(instrument_db(transport.db, registry))
     return h
@@ -216,6 +217,62 @@ def instrument_pool(pool, registry: MetricsRegistry) -> Optional[ObsHandle]:
             depth.set(len(pool._pending))
             live.set(pool._live)
         workers.set(pool.workers)
+
+    h.add_collector(collect)
+    return h
+
+
+def instrument_fleet(transport, registry: MetricsRegistry
+                     ) -> Optional[ObsHandle]:
+    """:class:`~repro.fleet.SocketTransport`-specific metrics (gated on
+    its ``host_states`` seam): fleet-wide queue depth and live-host
+    gauges, plus per-host labelled up/jobs/reconnects series so a
+    dashboard can tell *which* serve-worker host is flapping."""
+    if not hasattr(transport, "host_states"):      # not a fleet transport
+        return None
+    h = ObsHandle(registry)
+    depth = registry.gauge("fleet_queue_depth",
+                           "jobs waiting for a serve-worker slot")
+    hosts_n = registry.gauge("fleet_hosts_count", "configured fleet size")
+    hosts_live = registry.gauge("fleet_hosts_live",
+                                "hosts currently connected")
+    host_up = registry.gauge("fleet_host_up",
+                             "1 while this serve-worker host is connected",
+                             labelnames=("host",))
+    host_jobs = registry.counter("fleet_host_jobs_total",
+                                 "results returned by this host",
+                                 labelnames=("host",))
+    host_reconn = registry.counter("fleet_host_reconnects_total",
+                                   "connections re-established to this host",
+                                   labelnames=("host",))
+    sync = _delta_sync(registry, {
+        "fleet_reconnects_total": "fleet_reconnects_total",
+        "quarantined": "fleet_quarantined_total",
+    }, transport.stats, help_map={
+        "fleet_reconnects_total": "connections re-established fleet-wide",
+        "fleet_quarantined_total": "poison pairs quarantined in the DB",
+    })
+    last = {}                                      # per-host counter floors
+
+    def collect() -> None:
+        sync()
+        try:
+            s = transport.stats()
+        except Exception:
+            return
+        depth.set(s.get("fleet_queue_depth", 0))
+        hosts_n.set(s.get("fleet_hosts_count", 0))
+        hosts_live.set(s.get("fleet_hosts_live", 0))
+        for name, hs in (s.get("hosts") or {}).items():
+            host_up.labels(host=name).set(
+                1.0 if hs.get("state") == "connected" else 0.0)
+            for src, ctr in (("jobs_done", host_jobs),
+                             ("reconnects", host_reconn)):
+                v = float(hs.get(src, 0) or 0)
+                prev = last.get((name, src), 0.0)
+                if v > prev:                       # clamped delta
+                    ctr.labels(host=name).inc(v - prev)
+                last[(name, src)] = v
 
     h.add_collector(collect)
     return h

@@ -41,7 +41,8 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Optional, Sequence, Union
 
-from repro.artifacts import ProgramStore, load_agent, tune_through_store
+from repro.artifacts import (ProgramStore, load_agent, open_program_store,
+                             tune_through_store)
 from repro.configs.neurovec import DEFAULT, NeuroVecConfig
 from repro.core.agents import BruteForceAgent, make_agent
 from repro.core.env import CostModelEnv, MeasuredEnv
@@ -295,7 +296,11 @@ class TuningService:
                 restored on close).
     runner_kwargs: :class:`~repro.measure.runner.MeasureRunner` options
                 (``reps=``, ``interpret=``, ``max_dim=``, ...) — per
-                worker under the pool transport.
+                worker under the pool transport.  With
+                ``transport="socket"``, pass ``hosts=["host:port", ...]``
+                here instead (it flows to
+                :func:`~repro.measure.make_transport`; runner options
+                then live on the ``serve-worker`` hosts).
     """
 
     def __init__(self, cfg: NeuroVecConfig = DEFAULT,
@@ -346,9 +351,11 @@ class TuningService:
     def _resolve_store(self, store: Union[str, ProgramStore, None]
                        ) -> Optional[ProgramStore]:
         """A path opens a service-owned store (closed with the service);
-        an instance is borrowed."""
+        an instance is borrowed.  ``fleet://host:port`` paths open a
+        :class:`~repro.fleet.RemoteProgramStore` against the shared
+        ``serve-artifacts`` daemon."""
         if isinstance(store, str):
-            store = ProgramStore(store)
+            store = open_program_store(store)
             self._owned_stores.append(store)
         return store
 

@@ -1,0 +1,537 @@
+"""``repro.fleet`` — the cross-host socket transport + artifact service.
+
+The acceptance seam mirrors PR 6's: the transport conformance suite in
+``test_transport.py`` is imported *unmodified* and re-run with its
+``_make`` factory swapped for one that puts a real localhost
+:class:`~repro.fleet.MeasureServer` (fronting the same inner transport
+flavors) behind a :class:`~repro.fleet.SocketTransport` — every contract
+invariant must hold across a genuine TCP hop.  The chaos variant then
+re-runs the suite with a :class:`ChaosRunner` pool *behind* the socket
+and a :class:`FaultInjectionTransport` in front of it.
+
+On top of that: the fleet-specific failure modes (backend-fingerprint
+rejection, server killed mid-batch, connection reset without
+double-timing, fleet-down vs host-down), the shared artifact service
+(push invalidation, pull fallback via ``ProgramStore.refresh``,
+versioned keep-N GC), and the hardened wire framing.
+"""
+import inspect
+import io
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.artifacts import ProgramStore, open_program_store
+from repro.core.vectorizer import TileProgram
+from repro.fleet import (ArtifactServer, MeasureServer, RemoteMeasureDB,
+                         RemoteProgramStore, SocketTransport,
+                         complete_versions, parse_address, write_version)
+from repro.measure import (TRANSPORT_NAMES, FaultInjectionTransport,
+                           InProcessTransport, WorkerPoolTransport,
+                           make_transport, open_measure_db)
+from repro.measure.wire import MAX_FRAME_BYTES, read_frame, write_frame
+from repro.models.compute import KernelSite
+
+import test_transport as tt
+from pool_helpers import FailRunner, FakeRunner, fake_value
+
+# ---------------------------------------------------------------------------
+# wire hardening (satellite): framing must reject garbage, not allocate it
+# ---------------------------------------------------------------------------
+
+
+def _frame_bytes(msg) -> bytes:
+    buf = io.BytesIO()
+    write_frame(buf, msg)
+    return buf.getvalue()
+
+
+def test_wire_rejects_absurd_length_prefix():
+    # ASCII garbage read as a big-endian length decodes to gigabytes;
+    # the cap turns that into a loud error instead of an allocation
+    assert struct.unpack(">I", b"garb")[0] > MAX_FRAME_BYTES
+    with pytest.raises(ValueError, match="exceeds cap"):
+        read_frame(io.BytesIO(b"garbage that is not a frame"))
+
+
+def test_wire_cap_is_tunable_and_enforced_on_both_sides():
+    msg = {"pad": "x" * 100}
+    with pytest.raises(ValueError, match="exceeds cap"):
+        read_frame(io.BytesIO(_frame_bytes(msg)), max_bytes=16)
+    with pytest.raises(ValueError, match="refusing to write"):
+        write_frame(io.BytesIO(), msg, max_bytes=16)
+    # at the cap is fine — the bound is on the payload, not the message
+    data = _frame_bytes(msg)
+    assert read_frame(io.BytesIO(data), max_bytes=len(data) - 4) == msg
+
+
+def test_wire_truncation_is_eof_and_non_utf8_is_value_error():
+    data = _frame_bytes({"type": "job", "id": 7})
+    assert read_frame(io.BytesIO(data)) == {"type": "job", "id": 7}
+    assert read_frame(io.BytesIO(b"")) is None          # clean EOF
+    for cut in range(1, len(data)):                      # torn anywhere
+        with pytest.raises(EOFError):
+            read_frame(io.BytesIO(data[:cut]))
+    bad = struct.pack(">I", 4) + b"\xff\xfe\xfd\xfc"     # length OK, bytes not
+    with pytest.raises(ValueError):
+        read_frame(io.BytesIO(bad))
+
+
+def test_wire_fuzz_garbage_never_hangs_or_overallocates():
+    """Random byte soup must always resolve to clean-EOF / EOFError /
+    ValueError — never a hang, huge allocation, or foreign exception."""
+    rng = np.random.RandomState(0)
+    for trial in range(300):
+        blob = rng.bytes(int(rng.randint(0, 64)))
+        try:
+            msg = read_frame(io.BytesIO(blob))
+        except (EOFError, ValueError):
+            continue
+        assert msg is None                               # only empty input
+
+
+# ---------------------------------------------------------------------------
+# ProgramStore.refresh (satellite): the pull half of store invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_program_store_refresh_sees_other_writers(tmp_path):
+    p = str(tmp_path / "progs.jsonl")
+    with ProgramStore(p) as a, ProgramStore(p) as b:
+        b.put("k1", TileProgram({"s": (16, 128, 128)}))
+        assert a.get("k1") is None                       # not seen yet
+        assert a.refresh() == 1
+        assert a.get("k1").tiles == {"s": (16, 128, 128)}
+        assert a.refresh() == 0                          # nothing new
+        # own appends re-applied idempotently (last-wins), not skipped
+        a.put("k2", TileProgram({"s": (8, 128, 128)}))
+        b.refresh()
+        assert b.get("k2").tiles == {"s": (8, 128, 128)}
+
+
+def test_program_store_refresh_skips_garbage_and_leaves_torn_tail(tmp_path):
+    p = str(tmp_path / "progs.jsonl")
+    with ProgramStore(p) as a:
+        line = json.dumps({"k": "k1", "v": {"s": [16, 128, 128]}}) + "\n"
+        with open(p, "a") as f:
+            f.write("not json\n" + line[:10])            # torn mid-record
+        assert a.refresh() == 0                          # tail unconsumed
+        assert a.skipped_lines == 1
+        with open(p, "a") as f:
+            f.write(line[10:])                           # writer finishes
+        assert a.refresh() == 1
+        assert a.get("k1").tiles == {"s": (16, 128, 128)}
+        assert a.skipped_lines == 1                      # no double count
+
+
+# ---------------------------------------------------------------------------
+# localhost fleet fixtures
+# ---------------------------------------------------------------------------
+
+_CLEANUP = []
+
+
+def _track(obj):
+    _CLEANUP.append(obj)
+    return obj
+
+
+def _start_worker(inner, **kw) -> MeasureServer:
+    srv = MeasureServer(inner, **kw)
+    srv.start()
+    _track(srv)
+    _track(inner)
+    return srv
+
+
+@pytest.fixture(autouse=True)
+def _fleet_cleanup():
+    yield
+    while _CLEANUP:
+        _CLEANUP.pop().close()
+
+
+def _socket_make(kind, db_path=None, factory="pool_helpers:deterministic",
+                 **kw):
+    """``tt._make`` stand-in: the same inner transport flavors, behind a
+    real localhost ``MeasureServer``; the DB attaches on the *client*
+    (exactly-once and zero-retiming semantics are client-side)."""
+    if kind == "inproc":
+        runner = kw.pop("runner", None) or FakeRunner()
+        assert not kw
+        inner = InProcessTransport(runner)
+    else:
+        inner = WorkerPoolTransport(workers=2, factory=factory, **kw)
+    srv = _start_worker(inner)
+    return SocketTransport([srv.address], db=db_path,
+                           backoff_base=0.05, backoff_cap=0.2)
+
+
+CONFORMANCE = [f for name, f in sorted(vars(tt).items())
+               if name.startswith("test_conformance_")]
+
+
+@pytest.mark.parametrize("kind", tt.TRANSPORTS)
+@pytest.mark.parametrize("case", CONFORMANCE, ids=lambda c: c.__name__)
+def test_conformance_suite_over_socket(case, kind, tmp_path, monkeypatch):
+    """The unmodified transport contract suite, across a real TCP hop."""
+    monkeypatch.setattr(tt, "_make", _socket_make)
+    kwargs = ({"tmp_path": tmp_path}
+              if "tmp_path" in inspect.signature(case).parameters else {})
+    case(kind, **kwargs)
+
+
+def _chaos_socket_make(kind, db_path=None,
+                       factory="pool_helpers:deterministic", **kw):
+    """Chaos variant: a ChaosRunner worker pool *behind* the socket, a
+    FaultInjectionTransport in front of it."""
+    seed = int(os.environ["REPRO_CHAOS_SEED"])
+    os.environ["REPRO_CHAOS_BASE"] = factory
+    inner = WorkerPoolTransport(workers=2, factory="pool_helpers:chaos",
+                                job_timeout=2.0, **kw)
+    srv = _start_worker(inner)
+    return FaultInjectionTransport(
+        SocketTransport([srv.address], db=db_path,
+                        backoff_base=0.05, backoff_cap=0.2), seed=seed)
+
+
+@pytest.mark.parametrize("case", CONFORMANCE, ids=lambda c: c.__name__)
+def test_chaos_conformance_over_socket(case, tmp_path, monkeypatch):
+    """Contract suite again, with workers crashing/wedging/tearing frames
+    on the far side of the socket."""
+    state = tmp_path / "chaos_state"
+    state.mkdir()
+    monkeypatch.setenv("REPRO_CHAOS_STATE", str(state))
+    monkeypatch.setenv("REPRO_CHAOS_SEED", "0")
+    monkeypatch.setattr(tt, "_make", _chaos_socket_make)
+    kwargs = ({"tmp_path": tmp_path}
+              if "tmp_path" in inspect.signature(case).parameters else {})
+    case("pool", **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# fleet-specific failure modes
+# ---------------------------------------------------------------------------
+
+
+class _OtherBackendRunner(FakeRunner):
+    backend_key = "other-backend"
+
+
+def test_backend_mismatch_host_is_rejected():
+    """Two hosts with different backend fingerprints: whichever wins the
+    handshake sets the fleet's backend; the other is rejected for good
+    (mixed-hardware timings must never land in one DB)."""
+    a = _start_worker(InProcessTransport(FakeRunner()))
+    b = _start_worker(InProcessTransport(_OtherBackendRunner()))
+    with SocketTransport([a.address, b.address], backoff_base=0.05,
+                         backoff_cap=0.2) as t:
+        futs = t.submit(tt.SITES, tt.TILES)
+        t.drain()
+        assert [f.result() for f in futs] == \
+            [fake_value(s.key(), tuple(tl))
+             for s, tl in zip(tt.SITES, tt.TILES)]
+        assert t.backend_key in ("fake-backend", "other-backend")
+        for _ in range(200):                             # loser handshakes
+            if "rejected" in t.host_states().values():
+                break
+            time.sleep(0.02)
+        states = list(t.host_states().values())
+        assert states.count("rejected") == 1
+        assert states.count("connected") == 1
+        assert t.health() == "degraded"
+        assert t.stats()["failed_pairs"] == 0
+
+
+def test_server_killed_mid_batch_fails_over_to_surviving_host():
+    """Host A dies with jobs windowed on it: the jobs requeue and finish
+    on host B — no pair fails, values exact."""
+    a = _start_worker(InProcessTransport(FakeRunner(delay=0.2)))
+    b = _start_worker(InProcessTransport(FakeRunner(delay=0.2)))
+    sites = [KernelSite(site=f"s{i}", kind="matmul", m=32, n=128, k=128)
+             for i in range(8)]
+    tiles = np.array([[16, 128, 128]] * 8)
+    with SocketTransport([a.address, b.address], max_connect_failures=2,
+                         backoff_base=0.05, backoff_cap=0.2) as t:
+        futs = t.submit(sites, tiles)
+        time.sleep(0.3)                                  # jobs in flight
+        a.drop_connections()
+        a.close()                                        # host A is gone
+        t.drain()
+        for s, tl, f in zip(sites, tiles, futs):
+            assert f.result() == fake_value(s.key(), tuple(tl))
+        st = t.stats()
+        assert st["failed_pairs"] == 0
+        assert st["retries"] >= 1
+        assert t.host_states()[a.address] in ("gone", "backing_off",
+                                              "connecting")
+
+
+def test_connection_reset_resends_without_double_timing():
+    """A connection RST mid-measure: the client re-sends after reconnect
+    and the server answers from its idempotency cache — the inner
+    transport times the pair exactly once."""
+    inner = InProcessTransport(FakeRunner(delay=0.5))
+    srv = _start_worker(inner)
+    with SocketTransport([srv.address], backoff_base=0.05,
+                         backoff_cap=0.2) as t:
+        futs = t.submit([tt.MM], np.array([[16, 128, 128]]))
+        time.sleep(0.15)
+        srv.drop_connections()                           # RST mid-measure
+        t.drain()
+        assert futs[0].result() == fake_value(tt.MM.key(), (16, 128, 128))
+        st = t.stats()
+        assert st["retries"] >= 1 and st["failed_pairs"] == 0
+    assert inner.stats()["timed_pairs"] == 1             # never re-timed
+
+
+def test_idle_reset_then_resubmit_reconnects():
+    """A reset between batches: the next submit rides the reconnect."""
+    srv = _start_worker(InProcessTransport(FakeRunner()))
+    with SocketTransport([srv.address], backoff_base=0.05,
+                         backoff_cap=0.2) as t:
+        f1 = t.submit([tt.MM], np.array([[16, 128, 128]]))
+        t.drain()
+        assert f1[0].result() == fake_value(tt.MM.key(), (16, 128, 128))
+        srv.drop_connections()
+        time.sleep(0.1)
+        f2 = t.submit([tt.ATTN], np.array([[64, 128, 1]]))
+        t.drain()
+        assert f2[0].result() == fake_value(tt.ATTN.key(), (64, 128, 1))
+        assert t.stats()["failed_pairs"] == 0
+
+
+def test_fleet_down_at_construction_raises():
+    """No serve-worker reachable at all is a configuration error (fleet
+    down), not a degraded state — fail loudly before accepting work."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()                                            # nobody listening
+    with pytest.raises(RuntimeError, match="failed to start"):
+        SocketTransport([f"127.0.0.1:{port}"], max_connect_failures=2,
+                        backoff_base=0.01, backoff_cap=0.02)
+
+
+def test_every_host_dying_fails_pending_closed_and_health_down():
+    inner = InProcessTransport(FakeRunner(delay=0.4))
+    srv = _start_worker(inner)
+    t = SocketTransport([srv.address], max_connect_failures=2,
+                        backoff_base=0.02, backoff_cap=0.05)
+    futs = t.submit([tt.MM, tt.ATTN],
+                    np.array([[16, 128, 128], [64, 128, 1]]))
+    srv.drop_connections()
+    srv.close()                                          # fleet is gone
+    t.drain()                                            # must not hang
+    assert [f.result() for f in futs] == [float("inf")] * 2
+    assert t.stats()["failed_pairs"] == 2
+    assert t.health() == "down"
+    # a submit AFTER the fleet died must fail closed immediately — with
+    # no dispatcher left nothing would ever service the queue, so
+    # queueing it would hang drain() forever
+    [f3] = t.submit([tt.MM], np.array([[32, 128, 128]]))
+    assert f3.result(timeout=1) == float("inf")
+    t.drain()                                            # still not hung
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# registration + facade wiring
+# ---------------------------------------------------------------------------
+
+
+def test_make_transport_socket_validation():
+    assert TRANSPORT_NAMES == ("inproc", "pool", "socket")
+    with pytest.raises(ValueError, match="hosts"):
+        make_transport("socket")
+    with pytest.raises(ValueError, match="socket"):
+        make_transport("pool", hosts=["h:1"])
+    with pytest.raises(ValueError, match="workers"):
+        make_transport("socket", hosts=["h:1"], workers=4)
+    with pytest.raises(TypeError, match="serve-worker"):
+        make_transport("socket", hosts=["h:1"], reps=3)
+
+
+def test_parse_address_shapes():
+    assert parse_address("h:7761") == ("h", 7761)
+    assert parse_address("fleet://h:7761") == ("h", 7761)
+    assert parse_address(("h", 7761)) == ("h", 7761)
+    with pytest.raises(ValueError, match="host:port"):
+        parse_address("nonsense")
+
+
+def test_facade_socket_transport_end_to_end(tmp_path):
+    """``NeuroVectorizer(transport="socket", hosts=[...])`` tunes through
+    the fleet with zero facade-code special-casing; the recorded spec
+    reloads against the same hosts."""
+    from repro.api import NeuroVectorizer
+
+    srv = _start_worker(InProcessTransport(FakeRunner()))
+    p = str(tmp_path / "m.jsonl")
+    with NeuroVectorizer(_small_cfg(),
+                         agent="brute", oracle="measured",
+                         transport="socket", hosts=[srv.address],
+                         db_path=p) as nv:
+        t = nv.oracle.measure_fn.transport
+        assert t.backend_key == "fake-backend"
+        prog = nv.fit([tt.MM]).tune_sites([tt.MM])
+        assert tt.MM.key() in prog.tiles
+        assert t.stats()["timed_pairs"] > 0
+        assert nv._spec["hosts"] == [srv.address]
+    # hosts= outside the measured oracle is rejected like its siblings
+    with pytest.raises(ValueError, match="hosts"):
+        NeuroVectorizer(_small_cfg(), hosts=[srv.address])
+
+
+def _small_cfg():
+    from repro.configs.neurovec import NeuroVecConfig
+    return NeuroVecConfig(bm_choices=(16, 32), bn_choices=(128,),
+                          bk_choices=(128,), bq_choices=(64,),
+                          bkv_choices=(128,), chunk_choices=(32,))
+
+
+def test_serve_worker_cli_roundtrip(tmp_path):
+    """``python -m repro.fleet serve-worker --port 0`` binds, prints its
+    ready line, and serves a real client."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    src_dir = os.path.join(os.path.dirname(tests_dir), "src")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join([src_dir, tests_dir]))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.fleet", "serve-worker",
+         "--host", "127.0.0.1", "--port", "0", "--transport", "inproc",
+         "--factory", "pool_helpers:deterministic"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env)
+    try:
+        addr = None
+        for _ in range(20):
+            line = proc.stdout.readline()
+            if "ready on" in line:
+                addr = line.rsplit("ready on", 1)[1].strip()
+                break
+        assert addr, "serve-worker never printed its ready line"
+        with SocketTransport([addr]) as t:
+            futs = t.submit([tt.MM], np.array([[16, 128, 128]]))
+            t.drain()
+            assert futs[0].result() == fake_value(tt.MM.key(),
+                                                  (16, 128, 128))
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# the shared artifact service
+# ---------------------------------------------------------------------------
+
+
+def test_program_store_push_invalidation_and_pull_fallback(tmp_path):
+    """A put through one subscriber reaches the others *without* a
+    refresh (push); a write from an unsubscribed local process is picked
+    up by ``refresh()`` (pull fallback)."""
+    p = str(tmp_path / "p.jsonl")
+    art = _track(ArtifactServer(program_store=p))
+    art.start()
+    url = f"fleet://{art.address}"
+    a = _track(open_program_store(url))
+    b = _track(open_program_store(url))
+    assert isinstance(a, RemoteProgramStore)
+    b.put("k1", TileProgram({"s": (16, 128, 128)}))
+    for _ in range(200):
+        if a.pushes_received:
+            break
+        time.sleep(0.02)
+    assert a.pushes_received >= 1
+    assert a.get("k1").tiles == {"s": (16, 128, 128)}    # no refresh needed
+    # pull fallback: a plain local writer on the same file
+    with ProgramStore(p) as local:
+        local.put("k2", TileProgram({"s2": (8, 64, 32)}))
+    a.refresh()                                          # server refreshes
+    assert a.get("k2").tiles == {"s2": (8, 64, 32)}
+
+
+def test_remote_measure_db_round_trip_and_quarantine(tmp_path):
+    art = _track(ArtifactServer(measure_db=str(tmp_path / "m.jsonl")))
+    art.start()
+    url = f"fleet://{art.address}"
+    d1 = _track(RemoteMeasureDB(url))
+    d2 = _track(RemoteMeasureDB(url))
+    d1.put("mm|(16, 128, 128)|fake-backend", 0.125)
+    d1.quarantine("bad|(1, 1, 1)|fake-backend", 3, "kills workers")
+    for _ in range(200):
+        if d2.pushes_received >= 2:
+            break
+        time.sleep(0.02)
+    assert d2.get("mm|(16, 128, 128)|fake-backend") == 0.125
+    assert d2.get("bad|(1, 1, 1)|fake-backend") == float("inf")
+    assert d2.quarantined("bad|(1, 1, 1)|fake-backend")["attempts"] == 3
+    # a fresh client syncs the full state at connect
+    d3 = _track(RemoteMeasureDB(url))
+    assert d3.get("mm|(16, 128, 128)|fake-backend") == 0.125
+    assert d3.n_quarantined == 1
+    assert [(r.key, r.value) for r in d3.iter_records()] == \
+        [("mm|(16, 128, 128)|fake-backend", 0.125)]
+
+
+def test_fleet_db_gives_second_run_zero_retimings(tmp_path):
+    """The acceptance criterion: two fleet clients sharing a
+    ``fleet://`` MeasureDB — the second run re-times nothing."""
+    art = _track(ArtifactServer(measure_db=str(tmp_path / "m.jsonl")))
+    art.start()
+    url = f"fleet://{art.address}"
+    srv = _start_worker(InProcessTransport(FakeRunner()))
+    with SocketTransport([srv.address], db=url) as t1:
+        out1 = [f.result() for f in t1.submit(tt.SITES, tt.TILES)]
+        t1.drain()
+    with SocketTransport([srv.address], db=url) as t2:
+        out2 = [f.result() for f in t2.submit(tt.SITES, tt.TILES)]
+        st = t2.stats()
+    assert out2 == out1
+    assert st["hits"] == 3 and st["timed_pairs"] == 0    # zero re-timings
+
+
+def test_versioned_snapshots_keep_n_and_gc(tmp_path):
+    vdir = str(tmp_path / "versions")
+    art = _track(ArtifactServer(measure_db=str(tmp_path / "m.jsonl"),
+                                program_store=str(tmp_path / "p.jsonl"),
+                                versions_dir=vdir, keep_n=2))
+    art.start()
+    db = _track(RemoteMeasureDB(f"fleet://{art.address}"))
+    db.put("k|(8, 8, 8)|b", 0.5)
+    for i in range(4):
+        art.snapshot()
+    kept = complete_versions(vdir)
+    assert kept == [2, 3]                                # keep-2 GC'd 0, 1
+    for v in kept:
+        vd = os.path.join(vdir, f"version_{v:06d}")
+        assert os.path.exists(os.path.join(vd, "manifest.json"))
+        assert os.path.exists(os.path.join(vd, "measure.jsonl"))
+    # an in-progress (manifest-less) version directory is not "complete"
+    os.makedirs(os.path.join(vdir, "version_000009"))
+    assert complete_versions(vdir) == [2, 3]
+
+
+def test_instrument_fleet_exports_per_host_series():
+    from repro.obs import MetricsRegistry, instrument_transport
+
+    srv = _start_worker(InProcessTransport(FakeRunner()))
+    reg = MetricsRegistry()
+    with SocketTransport([srv.address]) as t:
+        h = instrument_transport(t, reg)
+        t.submit(tt.SITES, tt.TILES)
+        t.drain()
+        snap = reg.snapshot()
+        assert snap["fleet_hosts_live"] == 1
+        assert snap["fleet_hosts_count"] == 1
+        assert snap[f'fleet_host_up{{host="{srv.address}"}}'] == 1.0
+        assert snap[f'fleet_host_jobs_total{{host="{srv.address}"}}'] == 3
+        assert snap["transport_timed_pairs_total"] == 3
+        h.close()
