@@ -74,9 +74,12 @@ def _kill_host_mid_run(transport, server, after_pairs: int
     def _run():
         while True:
             st = transport.stats()
-            if st["timed_pairs"] + st["failed_pairs"] >= after_pairs:
+            done = (st["transport_timed_pairs_total"]
+                    + st["transport_failed_pairs_total"])
+            if done >= after_pairs:
                 break
-            if st["in_flight"] == 0 and st["timed_pairs"]:
+            if st["transport_inflight_pairs"] == 0 \
+                    and st["transport_timed_pairs_total"]:
                 return                  # batch already finished: no fault
             time.sleep(0.005)
         server.drop_connections()
@@ -99,7 +102,7 @@ def run() -> dict:
     local_wall = time.perf_counter() - t0
     st_local = pool.stats()
     pool.close()
-    assert st_local["timed_pairs"] == len(pairs), st_local
+    assert st_local["transport_timed_pairs_total"] == len(pairs), st_local
 
     inner = WorkerPoolTransport(workers=2, runner_kwargs=RUNNER_KW)
     srv = MeasureServer(inner)
@@ -113,7 +116,7 @@ def run() -> dict:
     fleet.close()
     srv.close()
     inner.close()
-    assert st_fleet["timed_pairs"] == len(pairs), st_fleet
+    assert st_fleet["transport_timed_pairs_total"] == len(pairs), st_fleet
     local_rate = len(pairs) / local_wall
     fleet_rate = len(pairs) / fleet_wall
     throughput = {
@@ -173,14 +176,16 @@ def run() -> dict:
         s.close()
     for i in inners:
         i.close()
-    assert st["failed_pairs"] == 0, st        # every pair still delivered
+    # every pair still delivered
+    assert st["transport_failed_pairs_total"] == 0, st
     healthy_rate = N_WIRE_PAIRS / healthy_wall
     faulted_rate = N_WIRE_PAIRS / faulted_wall
     reconnect = {
         "healthy_pairs_per_s": healthy_rate,
         "faulted_pairs_per_s": faulted_rate,
         "recovery_ratio": faulted_rate / healthy_rate,
-        "retries": st["retries"], "failed_pairs": st["failed_pairs"],
+        "retries": st["transport_retries_total"],
+        "failed_pairs": st["transport_failed_pairs_total"],
         "reconnects": st["fleet_reconnects_total"],
         "health_after": st["health"]}
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 import json
 import os
 import signal
+import sys
 import tempfile
 import threading
 import time
@@ -100,9 +101,12 @@ def _kill_one_worker_mid_run(pool, after_pairs: int = 2) -> threading.Thread:
     def _run():
         while True:
             st = pool.stats()
-            if st["timed_pairs"] + st["failed_pairs"] >= after_pairs:
+            done = (st["transport_timed_pairs_total"]
+                    + st["transport_failed_pairs_total"])
+            if done >= after_pairs:
                 break
-            if st["in_flight"] == 0 and st["timed_pairs"]:
+            if st["transport_inflight_pairs"] == 0 \
+                    and st["transport_timed_pairs_total"]:
                 return                  # batch already finished: no fault
             time.sleep(0.02)
         pids = _worker_pids()
@@ -128,10 +132,18 @@ def run() -> dict:
         wall = time.perf_counter() - t0
         st = pool.stats()
         pool.close()
-        assert st["timed_pairs"] == len(pairs), st
+        assert st["transport_timed_pairs_total"] == len(pairs), st
+        timed = st["transport_timed_pairs_total"]
+        cpus = os.cpu_count() or 1
+        if w > cpus:
+            print(f"bench_service: WARNING: workers={w} oversubscribes "
+                  f"the host ({cpus} CPUs) — scaling numbers for this "
+                  f"entry measure contention, not the pool",
+                  file=sys.stderr)
         throughput[f"workers_{w}"] = {
-            "timed_pairs": st["timed_pairs"], "wall_s": wall,
-            "spawn_s": spawn_s, "timings_per_s": st["timed_pairs"] / wall}
+            "timed_pairs": timed, "wall_s": wall,
+            "spawn_s": spawn_s, "timings_per_s": timed / wall,
+            "cpu_count": cpus, "oversubscribed": w > cpus}
         db_for_cache = db
     base = throughput[f"workers_{WORKER_COUNTS[0]}"]["timings_per_s"]
 
@@ -140,11 +152,15 @@ def run() -> dict:
     _submit_all(pool, pairs, dup=2)
     st = pool.stats()
     pool.close()
-    submitted = st["misses"] + st["coalesced"] + st["hits"]
-    coalesce = {"submitted": submitted, "coalesced": st["coalesced"],
-                "timed_pairs": st["timed_pairs"],
-                "coalesce_rate": st["coalesced"] / submitted}
-    assert st["timed_pairs"] == len(pairs), st
+    submitted = (st["transport_misses_total"]
+                 + st["transport_coalesced_total"]
+                 + st["transport_hits_total"])
+    coalesce = {"submitted": submitted,
+                "coalesced": st["transport_coalesced_total"],
+                "timed_pairs": st["transport_timed_pairs_total"],
+                "coalesce_rate":
+                    st["transport_coalesced_total"] / submitted}
+    assert st["transport_timed_pairs_total"] == len(pairs), st
 
     # -- cross-transport persistence: pool-written DB, in-process reader ----
     inproc = InProcessTransport(MeasureRunner(**RUNNER_KW),
@@ -152,7 +168,7 @@ def run() -> dict:
     _submit_all(inproc, pairs)
     st2 = inproc.stats()
     inproc.close()
-    assert st2["timed_pairs"] == 0, st2
+    assert st2["transport_timed_pairs_total"] == 0, st2
 
     # -- fault recovery: one worker SIGKILLed mid-run, cold DB --------------
     healthy = throughput["workers_2"]["timings_per_s"]
@@ -167,15 +183,16 @@ def run() -> dict:
     st3 = pool.stats()
     pool.close()
     # the requeue path must deliver every timing despite the kill
-    assert st3["failed_pairs"] == 0, st3
-    assert st3["timed_pairs"] == len(pairs), st3
-    faulted = st3["timed_pairs"] / wall
+    assert st3["transport_failed_pairs_total"] == 0, st3
+    assert st3["transport_timed_pairs_total"] == len(pairs), st3
+    faulted = st3["transport_timed_pairs_total"] / wall
     fault_recovery = {
         "healthy_timings_per_s": healthy,
         "faulted_timings_per_s": faulted,
         "recovery_ratio": faulted / healthy,
-        "worker_restarts": st3["worker_restarts"],
-        "retries": st3["retries"], "failed_pairs": st3["failed_pairs"],
+        "worker_restarts": st3["pool_worker_restarts_total"],
+        "retries": st3["transport_retries_total"],
+        "failed_pairs": st3["transport_failed_pairs_total"],
         "health_after": st3["health"]}
 
     results = {
@@ -190,8 +207,9 @@ def run() -> dict:
                     throughput[f"workers_{w}"]["timings_per_s"] / base
                     for w in WORKER_COUNTS[1:]},
         "coalesce": coalesce,
-        "cache": {"second_pass_timed_pairs": st2["timed_pairs"],
-                  "second_pass_hit_rate": st2["hit_rate"]},
+        "cache": {"second_pass_timed_pairs":
+                      st2["transport_timed_pairs_total"],
+                  "second_pass_hit_rate": st2["transport_hit_ratio"]},
         "fault_recovery": fault_recovery,
     }
     with open(OUT, "w") as f:
@@ -201,7 +219,7 @@ def run() -> dict:
               f"{throughput[f'workers_{w}']['timings_per_s']:.2f}")
     print(f"bench_service,coalesce_rate,{coalesce['coalesce_rate']:.2f}")
     print(f"bench_service,second_pass_hit_rate,"
-          f"{st2['hit_rate']:.2f}")
+          f"{st2['transport_hit_ratio']:.2f}")
     print(f"bench_service,fault_recovery_ratio,"
           f"{fault_recovery['recovery_ratio']:.2f}")
     print(f"bench_service,out,{OUT}")
@@ -209,6 +227,5 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
-    import sys
     sys.path.insert(0, "src")
     run()

@@ -1,0 +1,239 @@
+"""Benchmark of the latency-SLO serving path (``repro.serving``).
+
+Writes ``BENCH_serving.json`` with the numbers the serving story is
+judged on:
+
+* ``one_dispatch`` — the counter-asserted proof that a model-oracle
+  tune through the server is ONE jitted device dispatch per batch:
+  over the measured rounds ``fused_dispatches == batches`` with a
+  single trace (bucketed jit reuse, no retraces).
+* ``throughput`` — tunes/s at 8 concurrent sessions, batched
+  (all sessions submit ``tune_async`` and the flusher coalesces them
+  into one batch) vs. sequential (one blocking ``tune`` at a time
+  through the same server).  The fused route must hold ``speedup >= 2``
+  (asserted); the shared-PPO agent route is reported alongside.
+* ``latency_ms`` — client-observed p50/p99 per serving tier: ``cold``
+  (fresh service, first tune: jit trace + compile included),
+  ``warm_agent`` (same server, compiled route, through the batcher),
+  ``warm_store`` (repeat site set answered by the ProgramStore at
+  admission — never queued).
+
+Interpret-mode numbers on CPU track the *serving overhead* trajectory
+(queueing, batching, dispatch count), not device kernel speed.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.bench_serving`` (env
+``BENCH_FAST=1`` trims rounds; ``BENCH_SERVING_OUT`` overrides the
+output path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.neurovec import NeuroVecConfig
+from repro.core.agents import make_agent
+from repro.core.env import CostModelEnv
+from repro.models.compute import KernelSite
+from repro.service import TuningService
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+OUT = os.environ.get("BENCH_SERVING_OUT", "BENCH_serving.json")
+N_SESSIONS = 8
+ROUNDS = 3 if FAST else 10
+COLD_RUNS = 2 if FAST else 3
+WARM_TUNES = 10 if FAST else 30
+PPO_STEPS = 16 if FAST else 48
+# max_wait above the submission jitter of 8 threadless tune_asyncs so
+# every round provably coalesces into ONE batch (the dispatch-count
+# assert depends on it); both phases pay it, so the speedup is fair.
+# The huge slo keeps deadline urgency (whose EMA the warm-up compile
+# inflates) from flushing batches early and racing the submissions.
+SERVING = {"max_wait_ms": 10.0, "slo_ms": 60_000.0}
+
+
+def small_cfg() -> NeuroVecConfig:
+    return NeuroVecConfig(
+        bm_choices=(16, 32), bn_choices=(128,), bk_choices=(128,),
+        bq_choices=(32, 64), bkv_choices=(128,), chunk_choices=(16, 32),
+        train_batch=32, sgd_minibatch=16, ppo_epochs=2)
+
+
+CFG = small_cfg()
+
+
+def _sites(tag: str, n: int = 3):
+    """Distinct per-session site lists (cross-request mixing in the
+    batcher would be visible as a wrong result)."""
+    return [KernelSite(site=f"{tag}.mm{i}", kind="matmul",
+                       m=32 * (i + 1), n=128, k=128) for i in range(n)]
+
+
+def _percentiles(samples_s) -> dict:
+    a = np.asarray(samples_s, np.float64) * 1e3
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "n": int(a.size)}
+
+
+def _phase_throughput(svc, pairs, batched: bool):
+    """Tunes/s over ROUNDS; batched submits every session's tune_async
+    per round, sequential blocks on one tune at a time."""
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        if batched:
+            futs = [s.tune_async(ss) for s, ss in pairs]
+            for f in futs:
+                f.result(timeout=300)
+        else:
+            for s, ss in pairs:
+                s.tune(ss)
+    wall = time.perf_counter() - t0
+    return len(pairs) * ROUNDS / wall
+
+
+def bench_fused_route() -> tuple:
+    """8 brute/model sessions through one server: the one-dispatch proof
+    plus batched-vs-sequential tunes/s on the fused route."""
+    with TuningService(CFG, serving=SERVING, metrics=False) as svc:
+        pairs = [(svc.open_session(agent="brute", oracle="model"),
+                  _sites(f"bf{i}")) for i in range(N_SESSIONS)]
+        for s, ss in pairs:
+            s.fit(ss)
+        # warm round: pays the jit trace + compile once, uncounted
+        for f in [s.tune_async(ss) for s, ss in pairs]:
+            f.result(timeout=300)
+
+        st0 = svc.server.stats()
+        batched = _phase_throughput(svc, pairs, batched=True)
+        st1 = svc.server.stats()
+        sequential = _phase_throughput(svc, pairs, batched=False)
+        st2 = svc.server.stats()
+
+    d_batches = st1["serving_batches_total"] - st0["serving_batches_total"]
+    d_disp = (st1["serving_fused_dispatches_total"]
+              - st0["serving_fused_dispatches_total"])
+    d_req = st1["serving_requests_total"] - st0["serving_requests_total"]
+    one_dispatch = {
+        "requests": d_req,
+        "batches": d_batches,
+        "fused_dispatches": d_disp,
+        "fused_traces_total": st2["serving_fused_traces_total"],
+        "dispatches_equal_batches": d_disp == d_batches,
+    }
+    # the acceptance proof: every coalesced round was ONE device dispatch
+    assert d_batches == ROUNDS, (d_batches, ROUNDS)
+    assert d_disp == d_batches, one_dispatch
+    assert d_req == N_SESSIONS * ROUNDS, one_dispatch
+    # bucketed jit reuse: one trace per distinct pad bucket (batched
+    # rounds share one bucket, sequential tunes another)
+    assert st2["serving_fused_traces_total"] <= 2, st2
+
+    speedup = batched / sequential
+    assert speedup >= 2.0, (batched, sequential, speedup)
+    return one_dispatch, {"batched_tunes_per_s": batched,
+                          "sequential_tunes_per_s": sequential,
+                          "speedup": speedup}
+
+
+def bench_agent_route() -> dict:
+    """8 sessions SHARING one fitted PPO agent: concurrent requests
+    coalesce into one padded-bucket jitted forward per batch."""
+    agent = make_agent("ppo", CFG, seed=0)
+    fit_sites = _sites("pf", n=4)
+    agent.fit(fit_sites, CostModelEnv(CFG, seed=0),
+              total_steps=PPO_STEPS)
+    with TuningService(CFG, serving=SERVING, metrics=False) as svc:
+        pairs = [(svc.open_session(agent=agent, oracle="model"),
+                  _sites(f"ap{i}")) for i in range(N_SESSIONS)]
+        for f in [s.tune_async(ss) for s, ss in pairs]:   # warm
+            f.result(timeout=300)
+        st0 = svc.server.stats()
+        batched = _phase_throughput(svc, pairs, batched=True)
+        st1 = svc.server.stats()
+        sequential = _phase_throughput(svc, pairs, batched=False)
+    d_fwd = (st1["serving_agent_batches_total"]
+             - st0["serving_agent_batches_total"])
+    d_req = (st1["serving_batched_requests_total"]
+             - st0["serving_batched_requests_total"])
+    return {"batched_tunes_per_s": batched,
+            "sequential_tunes_per_s": sequential,
+            "speedup": batched / sequential,
+            "forwards_batched_phase": d_fwd,
+            "requests_batched_phase": d_req,
+            "coalesce_ratio": d_req / d_fwd if d_fwd else 0.0}
+
+
+def bench_latency_tiers() -> dict:
+    sites = _sites("lt")
+    # cold: fresh service each run — first tune pays trace + compile
+    cold = []
+    for _ in range(COLD_RUNS):
+        with TuningService(CFG, serving=True, metrics=False) as svc:
+            s = svc.open_session(agent="brute", oracle="model")
+            s.fit(sites)
+            t0 = time.perf_counter()
+            s.tune(sites)
+            cold.append(time.perf_counter() - t0)
+            # warm-agent: same server, compiled route, no store
+            warm_agent = []
+            for _ in range(WARM_TUNES):
+                t0 = time.perf_counter()
+                s.tune(sites)
+                warm_agent.append(time.perf_counter() - t0)
+    # warm-store: repeat site set resolved at admission, never queued
+    tmp = tempfile.mkdtemp(prefix="bench_serving_")
+    with TuningService(CFG, serving=True, metrics=False,
+                       program_store=os.path.join(tmp, "p.jsonl")) as svc:
+        s = svc.open_session(agent="brute", oracle="model")
+        s.fit(sites)
+        s.tune(sites)                        # populate the store
+        warm_store = []
+        for _ in range(WARM_TUNES):
+            t0 = time.perf_counter()
+            s.tune(sites)
+            warm_store.append(time.perf_counter() - t0)
+        st = svc.server.stats()
+    assert st["serving_store_hits_total"] == WARM_TUNES, st
+    assert st["serving_batches_total"] == 1, st      # hits never queued
+    return {"cold": _percentiles(cold),
+            "warm_agent": _percentiles(warm_agent),
+            "warm_store": _percentiles(warm_store)}
+
+
+def run() -> dict:
+    one_dispatch, fused = bench_fused_route()
+    agent = bench_agent_route()
+    tiers = bench_latency_tiers()
+    results = {
+        "config": {"fast": FAST, "n_sessions": N_SESSIONS,
+                   "rounds": ROUNDS, "cold_runs": COLD_RUNS,
+                   "warm_tunes": WARM_TUNES, "serving": SERVING,
+                   "sites_per_session": 3, "cpu_count": os.cpu_count()},
+        "one_dispatch": one_dispatch,
+        "throughput": {"n_sessions": N_SESSIONS,
+                       "fused": fused, "agent_ppo": agent},
+        "latency_ms": tiers,
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"bench_serving,fused_batched_tunes_per_s,"
+          f"{fused['batched_tunes_per_s']:.1f}")
+    print(f"bench_serving,fused_speedup_8_sessions,{fused['speedup']:.2f}")
+    print(f"bench_serving,agent_speedup_8_sessions,{agent['speedup']:.2f}")
+    print(f"bench_serving,fused_dispatches_per_batch,"
+          f"{one_dispatch['fused_dispatches'] / one_dispatch['batches']:.2f}")
+    for tier in ("cold", "warm_agent", "warm_store"):
+        print(f"bench_serving,{tier}_p50_ms,{tiers[tier]['p50']:.2f}")
+        print(f"bench_serving,{tier}_p99_ms,{tiers[tier]['p99']:.2f}")
+    print(f"bench_serving,out,{OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    run()

@@ -98,10 +98,12 @@ def main(argv=None):
     print(f"fleet hosts: {st['fleet_hosts_live']}/{st['fleet_hosts_count']}"
           f" live, {st['fleet_reconnects_total']} reconnects, health "
           f"{st['health']}")
-    print(f"measurements: {st['timed_pairs']} timed, "
-          f"{st['hits']} DB hits, {st['misses']} misses, "
-          f"{st['coalesced']} coalesced "
-          f"(hit rate {st['hit_rate']:.2f}) — rerun and timed goes to 0")
+    print(f"measurements: {st['transport_timed_pairs_total']} timed, "
+          f"{st['transport_hits_total']} DB hits, "
+          f"{st['transport_misses_total']} misses, "
+          f"{st['transport_coalesced_total']} coalesced "
+          f"(hit rate {st['transport_hit_ratio']:.2f}) — rerun and timed "
+          f"goes to 0")
     watcher.close()
     nv.close()
     return prog

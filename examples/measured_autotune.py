@@ -100,11 +100,12 @@ def main(argv=None):
     print(f"measured speedup vs heuristic baseline: "
           f"{nv.speedup(prog, sites):.2f}x")
     st = nv.oracle.measure_fn.transport.stats()
-    print(f"measurements: {st['timed_pairs']} timed, "
-          f"{st['hits']} DB hits, {st['misses']} misses, "
-          f"{st['coalesced']} coalesced "
-          f"(hit rate {st['hit_rate']:.2f}) — rerun with the same --db "
-          f"and timed goes to 0")
+    print(f"measurements: {st['transport_timed_pairs_total']} timed, "
+          f"{st['transport_hits_total']} DB hits, "
+          f"{st['transport_misses_total']} misses, "
+          f"{st['transport_coalesced_total']} coalesced "
+          f"(hit rate {st['transport_hit_ratio']:.2f}) — rerun with the "
+          f"same --db and timed goes to 0")
     if args.prune_topk is not None:
         state = ("active" if nv.oracle.prune_active
                  else "inactive (DB too cold to train the surrogate)")

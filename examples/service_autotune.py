@@ -82,11 +82,14 @@ def main(argv=None):
         for handle, prog in ((rl, rl_prog), (sweep, sweep_prog)):
             s = handle.stats()
             print(f"[{s['session']}] agent={s['agent']} "
-                  f"tunes={s['tunes']} sites={s['sites_tuned']} "
-                  f"fit {s['fit_wall_s']:.2f}s tune {s['tune_wall_s']:.2f}s "
-                  f"| transport Δ: {s['transport']['timed_pairs']} timed, "
-                  f"{s['transport']['hits']} hits, "
-                  f"{s['transport']['coalesced']} coalesced")
+                  f"tunes={s['session_tunes_total']} "
+                  f"sites={s['session_sites_tuned_total']} "
+                  f"fit {s['session_fit_seconds_total']:.2f}s "
+                  f"tune {s['session_tune_seconds_total']:.2f}s "
+                  f"| transport Δ: "
+                  f"{s['transport']['transport_timed_pairs_total']} timed, "
+                  f"{s['transport']['transport_hits_total']} hits, "
+                  f"{s['transport']['transport_coalesced_total']} coalesced")
         for k in sorted(sweep_prog.tiles):
             print(f"  {k}: rl={rl_prog.tiles[k]} brute={sweep_prog.tiles[k]}")
 
@@ -118,10 +121,12 @@ def main(argv=None):
             with open(args.metrics_out, "w") as f:
                 json.dump(snap, f, indent=1, default=str)
         st = svc.transport.stats()
-    print(f"measurements: {st['timed_pairs']} timed, {st['hits']} DB hits, "
-          f"{st['coalesced']} coalesced, {st['retries']} retries "
-          f"across {st['workers']} workers — rerun with the same --db "
-          f"and timed goes to 0")
+    print(f"measurements: {st['transport_timed_pairs_total']} timed, "
+          f"{st['transport_hits_total']} DB hits, "
+          f"{st['transport_coalesced_total']} coalesced, "
+          f"{st['transport_retries_total']} retries "
+          f"across {st['pool_workers_count']} workers — rerun with the "
+          f"same --db and timed goes to 0")
     return rl_prog, sweep_prog
 
 

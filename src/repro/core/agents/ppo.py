@@ -267,6 +267,23 @@ class PPOAgent:
         ctx, mask, vs = feats if feats is not None else self.feats(sites)
         return np.asarray(self._jit_greedy(self.params, ctx, mask, vs))
 
+    def act_bucketed(self, sites, *, bucket: Optional[int] = None,
+                     feats=None) -> np.ndarray:
+        """Greedy ``act`` with the batch dim padded up to ``bucket`` rows
+        (repeating row 0) so serving-path batches of varying size share one
+        jit specialization per bucket instead of retracing per batch shape.
+        Per-row results are bitwise equal to :meth:`act` — the forward is
+        row-independent (regression-tested in ``tests/test_serving.py``)."""
+        n = len(sites)
+        ctx, mask, vs = feats if feats is not None else self.feats(sites)
+        if bucket is not None and bucket > n:
+            pad = [(0, bucket - n)] + [(0, 0)] * (ctx.ndim - 1)
+            ctx = jnp.pad(ctx, pad, mode="edge")
+            mask = jnp.pad(mask, [(0, bucket - n)] + [(0, 0)]
+                           * (mask.ndim - 1), mode="edge")
+            vs = jnp.pad(vs, [(0, bucket - n), (0, 0)], mode="edge")
+        return np.asarray(self._jit_greedy(self.params, ctx, mask, vs))[:n]
+
     # -- PPO update ---------------------------------------------------------
     def _loss_fn(self, p, ctx, mask, vs, actions, raw, old_logp, rewards):
         out, v = policy_forward(p, self.nv, self.head_sizes, ctx, mask,

@@ -492,7 +492,7 @@ class SocketTransport:
                          "reconnects": l.reconnects,
                          "connect_failures": l.failures}
                 for l in self._links}
-        s["quarantined"] = s["fleet_quarantined_total"] = \
+        s["fleet_quarantined_total"] = \
             getattr(self.db, "n_quarantined", 0) if self.db is not None else 0
         return s
 

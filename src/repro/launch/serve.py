@@ -57,6 +57,45 @@ def _warn_missing_tiles(prog, sites) -> list:
     return names
 
 
+def _serving_plan(args, sites):
+    """Tune through ``TuningService(serving=...)``: the request is
+    admitted to the deadline-aware batch server and (model/surrogate
+    oracles + brute search) executes as one fused device dispatch."""
+    from repro.configs.neurovec import DEFAULT
+    from repro.service import TuningService
+
+    svc_kw = {}
+    if args.program_store:
+        svc_kw["program_store"] = args.program_store
+    oracle = "model"
+    if args.measured:
+        oracle = "measured"
+        svc_kw.update(
+            db_path=args.measure_db, transport=args.transport,
+            workers=(args.workers if args.transport == "pool" else None))
+        if args.transport == "socket":
+            svc_kw["hosts"] = args.hosts.split(",")
+        else:
+            svc_kw["reps"] = args.measure_reps
+    with TuningService(DEFAULT, serving={"slo_ms": args.slo_ms},
+                       **svc_kw) as svc:
+        sess = svc.open_session(agent=args.autotune, oracle=oracle,
+                                agent_ckpt=args.agent_ckpt or None)
+        if not args.agent_ckpt:
+            fit_kw = ({"total_steps": args.autotune_steps}
+                      if args.autotune == "ppo" else {})
+            sess.fit(sites, **fit_kw)
+        prog = sess.tune(sites)            # admitted under the SLO budget
+        st = svc.server.stats()
+        print(f"[serve] serving: p50 {st['serving_tune_p50_ms']:.2f} ms, "
+              f"p99 {st['serving_tune_p99_ms']:.2f} ms "
+              f"(slo {args.slo_ms:.0f} ms), shed: "
+              f"{st['serving_shed_total']}, fused dispatches: "
+              f"{st['serving_fused_dispatches_total']}, "
+              f"health: {svc.server.health()}")
+    return prog
+
+
 def _tile_plan(args, model, params, batch, cache):
     """Extract the serving-step kernel sites and produce a TileProgram
     through the ``repro.api`` facade (or load one from disk)."""
@@ -73,6 +112,11 @@ def _tile_plan(args, model, params, batch, cache):
     if args.tiles:
         prog = api.TileProgram.load(args.tiles)
         _warn_missing_tiles(prog, sites)
+        nv = None
+    elif args.serving:
+        prog = _serving_plan(args, sites)
+        if args.save_tiles:
+            prog.save(args.save_tiles)
         nv = None
     else:
         oracle_kw = {}
@@ -120,8 +164,9 @@ def _tile_plan(args, model, params, batch, cache):
     if args.measured and nv is not None:
         t = env.measure_fn.transport
         st = t.stats()
-        print(f"[serve] measurements: {st['timed_pairs']} timed, "
-              f"{st['hits']} DB hits, {st['coalesced']} coalesced "
+        print(f"[serve] measurements: {st['transport_timed_pairs_total']} "
+              f"timed, {st['transport_hits_total']} DB hits, "
+              f"{st['transport_coalesced_total']} coalesced "
               f"({t.backend_key})")
         if args.prune_topk is not None:
             state = "active" if env.prune_active else \
@@ -150,6 +195,13 @@ def main(argv=None):
                          "(ppo, dtree, nns, brute, random, polly, baseline)")
     ap.add_argument("--autotune-steps", type=int, default=2000,
                     help="RL budget when --autotune ppo")
+    ap.add_argument("--serving", action="store_true",
+                    help="tune through the latency-SLO serving path "
+                         "(repro.serving): requests are admitted to a "
+                         "deadline-aware batch server and executed as "
+                         "fused device dispatches")
+    ap.add_argument("--slo-ms", type=float, default=100.0,
+                    help="per-request tune SLO budget for --serving")
     ap.add_argument("--tiles", default=None,
                     help="load a saved TileProgram instead of tuning")
     ap.add_argument("--save-tiles", default=None)
@@ -202,6 +254,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.inject and not (args.autotune or args.tiles):
         ap.error("--inject requires a tile plan: pass --autotune or --tiles")
+    if args.serving and (args.tiles or not args.autotune):
+        ap.error("--serving tunes through the batch server: pass "
+                 "--autotune and no --tiles (which loads a finished plan)")
+    if args.serving and args.prune_topk is not None:
+        ap.error("--prune-topk is not supported on the --serving path")
+    if args.serving and args.trace_out:
+        ap.error("--trace-out records the facade span tree; it does not "
+                 "apply to --serving (use --metrics-out for serving_* "
+                 "series)")
     if args.measured and (args.tiles or not args.autotune):
         ap.error("--measured requires --autotune and no --tiles (it "
                  "changes the tuning oracle; --tiles loads a finished "

@@ -479,16 +479,11 @@ class WorkerPoolTransport:
         return "ok"
 
     def stats(self) -> dict:
-        """Transport counters + pool-specific keys, in both the unified
-        ``<subsystem>_<noun>_<unit>`` naming and the legacy spelling.
-
-        .. deprecated:: PR 8
-            ``workers`` / ``worker_restarts`` / ``quarantined`` are
-            compatibility aliases of ``pool_workers_count`` /
-            ``pool_worker_restarts_total`` / ``pool_quarantined_total``
-            (one release; see :class:`repro.obs.MetricsRegistry` for the
-            naming authority).
-        """
+        """Transport counters + pool-specific keys in the unified
+        ``<subsystem>_<noun>_<unit>`` naming (see
+        :class:`repro.obs.MetricsRegistry` for the naming authority; the
+        PR 8 "one release" ``workers`` / ``worker_restarts`` /
+        ``quarantined`` aliases are removed as scheduled)."""
         with self._cv:
             s = self._stats.snapshot(in_flight=len(self._inflight))
             s["health"] = self._health_locked()
@@ -496,10 +491,9 @@ class WorkerPoolTransport:
             s["pool_queue_wait_seconds_total"] = self.queue_wait_seconds
             s["pool_run_seconds_total"] = self.run_seconds
             s["pool_jobs_finished_total"] = self.jobs_finished
-        s["workers"] = s["pool_workers_count"] = self.workers
-        s["worker_restarts"] = s["pool_worker_restarts_total"] = \
-            self.worker_restarts
-        s["quarantined"] = s["pool_quarantined_total"] = \
+        s["pool_workers_count"] = self.workers
+        s["pool_worker_restarts_total"] = self.worker_restarts
+        s["pool_quarantined_total"] = \
             self.db.n_quarantined if self.db is not None else 0
         return s
 

@@ -42,37 +42,21 @@ class _TransportStats:
         self.failed_pairs = 0    # measurements resolved to inf (fail-closed)
         self.retries = 0         # jobs requeued after a worker death
 
-    #: legacy key -> unified ``<subsystem>_<noun>_<unit>`` key
-    UNIFIED = {"hits": "transport_hits_total",
-               "misses": "transport_misses_total",
-               "coalesced": "transport_coalesced_total",
-               "timed_pairs": "transport_timed_pairs_total",
-               "failed_pairs": "transport_failed_pairs_total",
-               "retries": "transport_retries_total",
-               "in_flight": "transport_inflight_pairs",
-               "hit_rate": "transport_hit_ratio"}
-
     def snapshot(self, in_flight: int = 0) -> dict:
-        """Counter snapshot in both spellings.
-
-        .. deprecated:: PR 8
-            the bare keys (``hits``, ``misses``, ``coalesced``,
-            ``timed_pairs``, ``failed_pairs``, ``retries``,
-            ``in_flight``, ``hit_rate``) are compatibility aliases of
-            the unified ``transport_*`` keys in :attr:`UNIFIED`, kept
-            for one release.  New code should read the unified names —
-            they are the same series ``repro.obs`` registries expose.
-        """
+        """Counter snapshot in the unified ``<subsystem>_<noun>_<unit>``
+        spellings — the same series ``repro.obs`` registries expose.
+        (The PR 8 "one release" bare aliases — ``hits``, ``misses``,
+        ``coalesced``, ``timed_pairs``, ``failed_pairs``, ``retries``,
+        ``in_flight``, ``hit_rate`` — are removed as scheduled.)"""
         n = self.hits + self.misses + self.coalesced
-        s = {"hits": self.hits, "misses": self.misses,
-             "coalesced": self.coalesced,
-             "timed_pairs": self.timed_pairs,
-             "failed_pairs": self.failed_pairs,
-             "retries": self.retries, "in_flight": in_flight,
-             "hit_rate": (self.hits / n) if n else 0.0}
-        for old, new in self.UNIFIED.items():
-            s[new] = s[old]
-        return s
+        return {"transport_hits_total": self.hits,
+                "transport_misses_total": self.misses,
+                "transport_coalesced_total": self.coalesced,
+                "transport_timed_pairs_total": self.timed_pairs,
+                "transport_failed_pairs_total": self.failed_pairs,
+                "transport_retries_total": self.retries,
+                "transport_inflight_pairs": in_flight,
+                "transport_hit_ratio": (self.hits / n) if n else 0.0}
 
 
 class InProcessTransport:
@@ -201,15 +185,15 @@ class TransportMeasureFn:
 
     @property
     def hits(self) -> int:
-        return self.transport.stats()["hits"]
+        return self.transport.stats()["transport_hits_total"]
 
     @property
     def misses(self) -> int:
-        return self.transport.stats()["misses"]
+        return self.transport.stats()["transport_misses_total"]
 
     @property
     def hit_rate(self) -> float:
-        return self.transport.stats()["hit_rate"]
+        return self.transport.stats()["transport_hit_ratio"]
 
     @property
     def db(self):

@@ -18,7 +18,8 @@ from repro.obs.exporter import MetricsServer
 from repro.obs.instrument import (ObsHandle, instrument_db, instrument_env,
                                   instrument_fleet, instrument_oracle_stack,
                                   instrument_pool, instrument_program_store,
-                                  instrument_surrogate, instrument_transport)
+                                  instrument_serving, instrument_surrogate,
+                                  instrument_transport)
 from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
                                Histogram, MetricsRegistry, get_registry)
 from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
@@ -33,7 +34,7 @@ __all__ = [
     "ObsHandle", "instrument_transport", "instrument_pool",
     "instrument_fleet", "instrument_db",
     "instrument_env", "instrument_surrogate", "instrument_program_store",
-    "instrument_oracle_stack",
+    "instrument_oracle_stack", "instrument_serving",
     "resolve_obs",
 ]
 

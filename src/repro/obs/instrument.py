@@ -36,7 +36,8 @@ from .trace import NULL_TRACER
 
 __all__ = ["ObsHandle", "instrument_transport", "instrument_pool",
            "instrument_fleet", "instrument_db", "instrument_env",
-           "instrument_surrogate", "instrument_program_store"]
+           "instrument_surrogate", "instrument_program_store",
+           "instrument_serving"]
 
 _MARK = "_obs_instrumented"
 
@@ -151,12 +152,12 @@ def instrument_transport(transport, registry: MetricsRegistry,
     transport.submit, transport.drain = submit, drain
 
     sync = _delta_sync(registry, {
-        "hits": "transport_hits_total",
-        "misses": "transport_misses_total",
-        "coalesced": "transport_coalesced_total",
-        "timed_pairs": "transport_timed_pairs_total",
-        "failed_pairs": "transport_failed_pairs_total",
-        "retries": "transport_retries_total",
+        "transport_hits_total": "transport_hits_total",
+        "transport_misses_total": "transport_misses_total",
+        "transport_coalesced_total": "transport_coalesced_total",
+        "transport_timed_pairs_total": "transport_timed_pairs_total",
+        "transport_failed_pairs_total": "transport_failed_pairs_total",
+        "transport_retries_total": "transport_retries_total",
     }, transport.stats, help_map={
         "transport_hits_total": "pairs served from the DB",
         "transport_misses_total": "pairs that required a measurement",
@@ -172,7 +173,7 @@ def instrument_transport(transport, registry: MetricsRegistry,
             s = transport.stats()
         except Exception:
             return
-        inflight.set(s.get("in_flight", 0))
+        inflight.set(s.get("transport_inflight_pairs", 0))
         health.set(_HEALTH_CODE.get(s.get("health", "ok"), 0.0))
 
     h.add_collector(collect)
@@ -204,8 +205,8 @@ def instrument_pool(pool, registry: MetricsRegistry) -> Optional[ObsHandle]:
     pool.job_observer = observer
 
     sync = _delta_sync(registry, {
-        "worker_restarts": "pool_worker_restarts_total",
-        "quarantined": "pool_quarantined_total",
+        "pool_worker_restarts_total": "pool_worker_restarts_total",
+        "pool_quarantined_total": "pool_quarantined_total",
     }, pool.stats, help_map={
         "pool_worker_restarts_total": "worker respawns after a death",
         "pool_quarantined_total": "poison pairs quarantined in the DB",
@@ -247,7 +248,7 @@ def instrument_fleet(transport, registry: MetricsRegistry
                                    labelnames=("host",))
     sync = _delta_sync(registry, {
         "fleet_reconnects_total": "fleet_reconnects_total",
-        "quarantined": "fleet_quarantined_total",
+        "fleet_quarantined_total": "fleet_quarantined_total",
     }, transport.stats, help_map={
         "fleet_reconnects_total": "connections re-established fleet-wide",
         "fleet_quarantined_total": "poison pairs quarantined in the DB",
@@ -342,6 +343,74 @@ def instrument_program_store(store, registry: MetricsRegistry
             entries.set(len(store))
         except Exception:
             pass
+    h.add_collector(collect)
+    return h
+
+
+# -- serving ------------------------------------------------------------------
+def instrument_serving(server, registry: MetricsRegistry
+                       ) -> Optional[ObsHandle]:
+    """:class:`~repro.serving.Server`: queue-wait and end-to-end tune
+    latency histograms plus a batch-size histogram via the server's
+    ``request_observer`` seam (the serving analogue of the pool's
+    ``job_observer``), a queue-depth/health gauge collector, and clamped
+    counter mirrors for requests/sheds/deadline-misses/batches and the
+    fused one-dispatch counters."""
+    if server is None or _marked(server, registry):
+        return None
+    h = ObsHandle(registry)
+    qwait = registry.histogram("serving_queue_wait_seconds",
+                               "per-request time in the admission queue")
+    lat = registry.histogram("serving_tune_seconds",
+                             "end-to-end request latency (admit -> result)")
+    bsize = registry.histogram("serving_batch_requests",
+                               "requests coalesced per flushed batch")
+    depth = registry.gauge("serving_queue_depth",
+                           "requests awaiting a batch")
+    health = registry.gauge("serving_health", "0=ok 1=degraded 2=down")
+
+    def observer(event: str, queue_wait_s: float = 0.0,
+                 latency_s: float = 0.0, batch_requests: int = 0,
+                 **_fields) -> None:
+        if event == "complete":
+            qwait.observe(queue_wait_s)
+            lat.observe(latency_s)
+        elif event == "store_hit":
+            lat.observe(latency_s)
+        elif event == "batch":
+            bsize.observe(batch_requests)
+    server.request_observer = observer
+
+    sync = _delta_sync(registry, {
+        "serving_requests_total": "serving_requests_total",
+        "serving_shed_total": "serving_shed_total",
+        "serving_deadline_misses_total": "serving_deadline_misses_total",
+        "serving_batches_total": "serving_batches_total",
+        "serving_store_hits_total": "serving_store_hits_total",
+        "serving_fused_dispatches_total": "serving_fused_dispatches_total",
+        "serving_fused_traces_total": "serving_fused_traces_total",
+    }, server.stats, help_map={
+        "serving_requests_total": "tune requests admitted (incl. warm)",
+        "serving_shed_total": "requests rejected at max_queue depth",
+        "serving_deadline_misses_total":
+            "requests whose SLO budget expired before execution",
+        "serving_batches_total": "batches flushed",
+        "serving_store_hits_total":
+            "requests answered by program lookup at admission",
+        "serving_fused_dispatches_total":
+            "fused cost-grid device dispatches",
+        "serving_fused_traces_total": "fused cost-grid jit (re)traces",
+    })
+
+    def collect() -> None:
+        sync()
+        try:
+            s = server.stats()
+        except Exception:
+            return
+        depth.set(s.get("serving_queue_depth", 0))
+        health.set(_HEALTH_CODE.get(s.get("health", "ok"), 0.0))
+
     h.add_collector(collect)
     return h
 

@@ -54,22 +54,14 @@ from repro.measure import (TransportMeasureFn, make_transport,
 from repro.obs import NULL_TRACER, ObsHandle, resolve_obs
 from repro.obs.instrument import (instrument_oracle_stack,
                                   instrument_program_store,
+                                  instrument_serving,
                                   instrument_transport)
+from repro.serving.server import Server, ServingConfig
 from repro.surrogate import SurrogateOracle
 
-_COUNTERS = ("hits", "misses", "coalesced", "timed_pairs", "failed_pairs",
-             "retries")
-
-#: legacy SessionHandle.stats() key -> unified key (satellite of PR 8)
-_SESSION_UNIFIED = {"wall_s": "session_wall_seconds",
-                    "fit_wall_s": "session_fit_seconds_total",
-                    "tune_wall_s": "session_tune_seconds_total",
-                    "tunes": "session_tunes_total",
-                    "sites_tuned": "session_sites_tuned_total",
-                    "agent_inferences": "session_agent_inferences_total",
-                    "store_hits": "session_store_hits_total",
-                    "store_misses": "session_store_misses_total",
-                    "in_flight_tunes": "session_inflight_tunes"}
+_COUNTERS = ("transport_hits_total", "transport_misses_total",
+             "transport_coalesced_total", "transport_timed_pairs_total",
+             "transport_failed_pairs_total", "transport_retries_total")
 
 
 class SessionHandle:
@@ -150,16 +142,33 @@ class SessionHandle:
             self._fit_wall += dt
         return self
 
-    def tune(self, sites: Sequence) -> TileProgram:
-        """Greedy inference-mode tiles for ``sites`` (synchronous)."""
+    def tune(self, sites: Sequence, *,
+             slo_ms: Optional[float] = None) -> TileProgram:
+        """Greedy inference-mode tiles for ``sites`` (synchronous).
+        Under ``TuningService(serving=...)`` the call is admitted to the
+        shared :class:`~repro.serving.Server` (``slo_ms`` overrides the
+        server's default budget) and may raise its typed errors."""
         self._check_open()
+        if self.service.server is not None:
+            return self.service.server.submit(self, list(sites),
+                                              slo_ms=slo_ms).result()
         return self._tune(list(sites))
 
-    def tune_async(self, sites: Sequence) -> "Future[TileProgram]":
-        """Submit :meth:`tune` to the service's session pool; the result
-        future resolves to the :class:`TileProgram`."""
+    def tune_async(self, sites: Sequence, *,
+                   slo_ms: Optional[float] = None) -> "Future[TileProgram]":
+        """Submit :meth:`tune` and return a
+        :class:`~concurrent.futures.Future` of the :class:`TileProgram`.
+        Without serving the tune runs on the service's session pool;
+        under ``serving=`` it is admitted to the shared batch server
+        (raising :class:`~repro.serving.QueueFull` when shedding)."""
         self._check_open()
-        fut = self.service._submit(self._tune, list(sites))
+        if self.service.server is not None:
+            fut = self.service.server.submit(self, list(sites),
+                                             slo_ms=slo_ms)
+        else:
+            if slo_ms is not None:
+                raise ValueError("slo_ms needs TuningService(serving=...)")
+            fut = self.service._submit(self._tune, list(sites))
         with self._lock:
             self._outstanding.add(fut)
             self._m_inflight.set(len(self._outstanding))
@@ -174,26 +183,31 @@ class SessionHandle:
                                            self.oracle.space,
                                            self.oracle, self.program_store)
             sp.set(store_hit=bool(hit))
-        dt = time.perf_counter() - t0
+        self._account_tune(time.perf_counter() - t0, len(sites), hit)
+        return prog
+
+    def _account_tune(self, dt: float, n_sites: int, hit: bool) -> None:
+        """Book one completed tune (wall time, inference/store counters)
+        — shared by the inline path and the serving path, so a request
+        fulfilled by the batch server reports identically."""
         self._m_tune_s.observe(dt)
         self._m_tunes.inc()
-        self._m_sites.inc(len(sites))
+        self._m_sites.inc(n_sites)
         with self._lock:
             self._tune_wall += dt
             self._tunes += 1
-            self._sites_tuned += len(sites)
-            if self.program_store is not None and sites:
+            self._sites_tuned += n_sites
+            if self.program_store is not None and n_sites:
                 if hit:
                     self._store_hits += 1
                 else:
                     self._store_misses += 1
             if not hit:
-                self._agent_inferences += len(sites)
-        if self.program_store is not None and sites:
+                self._agent_inferences += n_sites
+        if self.program_store is not None and n_sites:
             (self._m_store_hits if hit else self._m_store_miss).inc()
         if not hit:
-            self._m_infer.inc(len(sites))
-        return prog
+            self._m_infer.inc(n_sites)
 
     def _forget(self, fut: Future) -> None:
         with self._lock:
@@ -209,42 +223,46 @@ class SessionHandle:
     def stats(self) -> dict:
         """Per-session counters + transport deltas since ``open_session``.
 
-        .. deprecated:: PR 8
-            the bare keys (``wall_s``, ``fit_wall_s``, ``tune_wall_s``,
-            ``tunes``, ``sites_tuned``, ``agent_inferences``,
-            ``store_hits``, ``store_misses``, ``in_flight_tunes``) are
-            compatibility aliases, kept for one release, of the unified
-            ``session_*`` keys — the same series the service's
-            :class:`~repro.obs.MetricsRegistry` exposes (labelled by
-            session name) in ``snapshot()``/``render_prom()``.
+        Keys are the unified ``<subsystem>_<noun>_<unit>`` spellings only
+        (the PR 8 "one release" legacy aliases — ``wall_s``, ``tunes``,
+        transport ``hits``/``misses``/... — are gone as scheduled): the
+        same series the service's :class:`~repro.obs.MetricsRegistry`
+        exposes, labelled by session name, in
+        ``snapshot()``/``render_prom()``.
         """
         t = self.oracle.transport
         now = self._base if t is None else t.stats()
         delta = {k: now.get(k, 0) - self._base.get(k, 0) for k in _COUNTERS}
-        n = delta["hits"] + delta["misses"] + delta["coalesced"]
-        delta["hit_rate"] = (delta["hits"] / n) if n else 0.0
-        delta["in_flight"] = now.get("in_flight", 0)
+        n = (delta["transport_hits_total"] + delta["transport_misses_total"]
+             + delta["transport_coalesced_total"])
+        delta["transport_hit_ratio"] = \
+            (delta["transport_hits_total"] / n) if n else 0.0
+        delta["transport_inflight_pairs"] = now.get(
+            "transport_inflight_pairs", 0)
         with self._lock:
             out = {"session": self.name, "agent": self.agent.name,
                    "health": self.oracle.health(),
-                   "wall_s": time.perf_counter() - self._opened,
-                   "fit_wall_s": self._fit_wall,
-                   "tune_wall_s": self._tune_wall,
-                   "tunes": self._tunes, "sites_tuned": self._sites_tuned,
-                   "agent_inferences": self._agent_inferences,
-                   "store_hits": self._store_hits,
-                   "store_misses": self._store_misses,
-                   "in_flight_tunes": len(self._outstanding),
+                   "session_wall_seconds":
+                       time.perf_counter() - self._opened,
+                   "session_fit_seconds_total": self._fit_wall,
+                   "session_tune_seconds_total": self._tune_wall,
+                   "session_tunes_total": self._tunes,
+                   "session_sites_tuned_total": self._sites_tuned,
+                   "session_agent_inferences_total": self._agent_inferences,
+                   "session_store_hits_total": self._store_hits,
+                   "session_store_misses_total": self._store_misses,
+                   "session_inflight_tunes": len(self._outstanding),
                    "transport": delta}
-        for old, new in _SESSION_UNIFIED.items():
-            out[new] = out[old]
         return out
 
     def drain(self) -> None:
         """Block until this session's async tunes (and everything the
-        shared transport has in flight) are finished."""
+        shared transport has in flight) are finished.  Waits without
+        re-raising: a serving-path future that failed its SLO carries
+        :class:`~repro.serving.DeadlineExceeded` for *its* caller, not
+        for whoever closes the session."""
         for f in list(self._outstanding):
-            f.result()
+            f.exception()
         self.oracle.drain()
 
     def close(self) -> None:
@@ -289,6 +307,12 @@ class TuningService:
                 timing DB, one level up.
     max_parallel_tunes: thread-pool width for :meth:`SessionHandle.
                 tune_async` (measurement parallelism is the transport's).
+    serving:    ``True`` / a :class:`~repro.serving.ServingConfig` / a
+                kwargs dict — start a shared :class:`~repro.serving
+                .Server`: every session's ``tune``/``tune_async`` is
+                admitted to its deadline-aware queue and batched through
+                fused device dispatches (``slo_ms=`` per call; typed
+                shedding via :class:`~repro.serving.QueueFull`).
     preemption: install a :class:`~repro.ft.monitor.PreemptionHandler`
                 whose SIGTERM callback is :meth:`close` — in-flight
                 tunes drain, workers stop, and every owned store/DB
@@ -310,6 +334,7 @@ class TuningService:
                  program_store: Union[str, ProgramStore, None] = None,
                  max_parallel_tunes: int = 4, preemption: bool = False,
                  metrics=None, trace=None,
+                 serving: Union[bool, dict, ServingConfig, None] = None,
                  **runner_kwargs):
         self.cfg = cfg
         self.seed = seed
@@ -347,6 +372,16 @@ class TuningService:
             "service_sessions_open", "sessions currently open")
         self._m_sessions_total = self.registry.counter(
             "service_sessions_total", "sessions opened over the lifetime")
+        # serving path (PR 10): sessions' tune/tune_async route through
+        # one shared batch server when serving= is set
+        if serving is None or serving is False:
+            self.server = None
+        else:
+            sc = (ServingConfig() if serving is True
+                  else ServingConfig(**serving) if isinstance(serving, dict)
+                  else serving)
+            self.server = Server(self, sc)
+            self._obs.adopt(instrument_serving(self.server, self.registry))
 
     def _resolve_store(self, store: Union[str, ProgramStore, None]
                        ) -> Optional[ProgramStore]:
@@ -448,28 +483,32 @@ class TuningService:
 
     # -- observability / lifecycle -------------------------------------------
     def health(self) -> str:
-        """The shared transport's ``ok | degraded | down``."""
+        """``ok | degraded | down``: the worst of the shared transport's
+        health and (under ``serving=``) the batch server's."""
         h = getattr(self.transport, "health", None)
-        return h() if callable(h) else "ok"
+        states = [h() if callable(h) else "ok"]
+        if self.server is not None:
+            states.append(self.server.health())
+        for level in ("down", "degraded"):
+            if level in states:
+                return level
+        return "ok"
 
     def stats(self) -> dict:
-        """Service-level counters + the shared transport's snapshot.
-
-        .. deprecated:: PR 8
-            ``sessions_open``/``sessions_total`` are compatibility
-            aliases of ``service_sessions_open`` /
-            ``service_sessions_total`` (one release) — the same series
-            :attr:`registry` exposes.
-        """
+        """Service-level counters + the shared transport's snapshot (and
+        the batch server's ``serving_*`` block when serving is on).
+        Unified key spellings only — the PR 8 legacy aliases
+        (``sessions_open``/``sessions_total``) are gone as scheduled."""
         open_n = sum(not s._closed for s in self._sessions)
         self._m_sessions.set(open_n)
-        return {"sessions_open": open_n,
-                "service_sessions_open": open_n,
-                "sessions_total": self._n_opened,
-                "service_sessions_total": self._n_opened,
-                "owns_transport": self._owns_transport,
-                "health": self.health(),
-                "transport": self.transport.stats()}
+        out = {"service_sessions_open": open_n,
+               "service_sessions_total": self._n_opened,
+               "owns_transport": self._owns_transport,
+               "health": self.health(),
+               "transport": self.transport.stats()}
+        if self.server is not None:
+            out["serving"] = self.server.stats()
+        return out
 
     def close(self) -> None:
         """Drain every session, stop the tune pool, and — when the
@@ -482,6 +521,9 @@ class TuningService:
         if self._preemption is not None:
             self._preemption.restore()
             self._preemption = None
+        # the server first: sessions' drain waits on futures it fulfills
+        if self.server is not None:
+            self.server.close()
         for s in self._sessions:
             s.close()
         self._executor.shutdown(wait=True)

@@ -1,0 +1,28 @@
+"""``repro.serving`` — batched on-device inference behind a latency SLO.
+
+The serving layer over :class:`~repro.service.TuningService` (the
+ROADMAP's "on-device search + latency-SLO serving path"):
+
+* :class:`FusedTuner` — model/surrogate-oracle tuning as ONE jitted
+  device dispatch (cost grid + inf-masking + greedy argmin end to end);
+* :class:`AgentBatch` — concurrent sessions' ``act`` calls coalesced
+  through a single jitted agent forward, bitwise equal to unbatched;
+* :class:`Server` — the deadline-aware admission queue: per-request SLO
+  budgets, max-wait/max-batch flush, typed shedding
+  (:class:`QueueFull` / :class:`DeadlineExceeded`), PR 6-style
+  ``health()``, unified ``serving_*`` ``stats()``.
+
+Callers normally never touch this package directly::
+
+    with TuningService(cfg, serving=True) as svc:      # or ServingConfig(...)
+        s = svc.open_session(agent="brute", oracle="model")
+        prog = s.tune_async(sites).result()            # one device dispatch
+"""
+from repro.serving.batcher import AgentBatch
+from repro.serving.fused import FusedTuner, bucket_size
+from repro.serving.server import (DeadlineExceeded, QueueFull, Server,
+                                  ServingConfig, ServingError)
+
+__all__ = ["AgentBatch", "FusedTuner", "bucket_size", "Server",
+           "ServingConfig", "ServingError", "QueueFull",
+           "DeadlineExceeded"]

@@ -1,0 +1,77 @@
+"""Cross-session micro-batching: many concurrent ``act``/``tune``
+requests, one jitted agent forward.
+
+Almost every agent in the registry prices sites independently per row,
+so a batch formed by *concatenating* several requests' site lists and
+running one forward produces, for each request, results bitwise equal to
+running that request alone (spy-asserted in ``tests/test_serving.py``
+for all seven agents).  :class:`AgentBatch` is that concat → one forward
+→ split step; the admission queue in :mod:`repro.serving.server` decides
+*when* a batch is cut.
+
+The one exception is :class:`~repro.core.agents.random_search
+.RandomAgent`: its deterministic deployment draw is shaped by the whole
+batch (``rng.integers(..., size=(n, 3))`` from the construction seed),
+so concatenation would change every request's actions.  Batch-unsafe
+agents run one ``act`` per request inside the flush instead — parity by
+construction, no coalescing win.
+
+For :class:`~repro.core.agents.ppo.PPOAgent` the forward goes through
+:meth:`~repro.core.agents.ppo.PPOAgent.act_bucketed` — the batch
+dimension is padded up to a power-of-two bucket so concurrent batches of
+varying size reuse one jit specialization instead of retracing per
+batch shape (the serving-stack analogue of PR 1's fused PPO step).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.agents.ppo import PPOAgent
+from repro.core.agents.random_search import RandomAgent
+from repro.serving.fused import bucket_size
+
+#: act(batch) != concat(act(parts)) for these — serve per request
+BATCH_UNSAFE = (RandomAgent,)
+
+
+class AgentBatch:
+    """One agent shared by many sessions: concatenated greedy ``act``.
+
+    ``act_many([sites_a, sites_b, ...])`` runs ONE agent forward over the
+    concatenation and returns per-request ``(n_i, 3)`` action arrays in
+    request order.  Counters feed ``Server.stats()``.
+    """
+
+    def __init__(self, agent):
+        self.agent = agent
+        self.coalesced = not isinstance(agent, BATCH_UNSAFE)
+        self.batches = 0          # forwards executed
+        self.requests = 0         # requests served through them
+        self.sites = 0            # sites across all forwards
+        self.last_batch_sites = 0
+
+    def act_many(self, site_lists: Sequence[List]) -> List[np.ndarray]:
+        flat = [s for sites in site_lists for s in sites]
+        if not self.coalesced:
+            out = [np.asarray(self.agent.act(sites, sample=False))
+                   for sites in site_lists]
+            self.batches += len(site_lists)
+        elif isinstance(self.agent, PPOAgent):
+            acts = self.agent.act_bucketed(flat,
+                                           bucket=bucket_size(len(flat)))
+            self.batches += 1
+        else:
+            acts = np.asarray(self.agent.act(flat, sample=False))
+            self.batches += 1
+        self.requests += len(site_lists)
+        self.sites += len(flat)
+        self.last_batch_sites = len(flat)
+        if not self.coalesced:
+            return out
+        out, off = [], 0
+        for sites in site_lists:
+            out.append(acts[off:off + len(sites)])
+            off += len(sites)
+        return out

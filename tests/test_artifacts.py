@@ -358,13 +358,14 @@ def test_service_sessions_share_store_and_warm_start_ckpt(tmp_path):
         np.testing.assert_array_equal(
             np.asarray(s1.agent.act(SITES, sample=False)), expect)
         p1 = s1.tune(SITES)
-        assert s1.stats()["store_misses"] == 1
+        assert s1.stats()["session_store_misses_total"] == 1
         # a SECOND warm session from the same ckpt: same fingerprint,
         # same store -> lookup, zero inferences
         s2 = svc.open_session(agent="ppo", oracle="model", agent_ckpt=art)
         p2 = s2.tune(SITES)
         st = s2.stats()
-        assert st["store_hits"] == 1 and st["agent_inferences"] == 0
+        assert st["session_store_hits_total"] == 1
+        assert st["session_agent_inferences_total"] == 0
         assert p2.tiles == p1.tiles
 
 

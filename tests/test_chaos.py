@@ -99,7 +99,8 @@ def test_fault_injection_transport_is_correctness_invisible():
     assert f[0] is f[1]                              # coalescing intact
     assert f[0].result() == fake_value(tt.MM.key(), (16, 128, 128))
     st = t.stats()
-    assert st["misses"] == 1 and st["coalesced"] == 1
+    assert st["transport_misses_total"] == 1
+    assert st["transport_coalesced_total"] == 1
     assert "faults_injected" in st
     assert t.health() == "ok"
     t.close()
@@ -134,6 +135,7 @@ def test_pool_torn_result_frame_requeues_and_recovers(tmp_path,
         assert futs[0].result() == fake_value(torn.key(), (16, 128, 128))
         assert futs[1].result() == fake_value(tt.MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["retries"] >= 1 and st["worker_restarts"] >= 1
-        assert st["failed_pairs"] == 0
+        assert st["transport_retries_total"] >= 1
+        assert st["pool_worker_restarts_total"] >= 1
+        assert st["transport_failed_pairs_total"] == 0
     assert os.path.exists(sentinel)                  # it really tore

@@ -98,7 +98,7 @@ def test_quarantine_persists_and_blocks_reattempts_across_processes(
         t1.drain()
         assert futs[0].result() == float("inf")
         backend = t1.backend_key
-        assert t1.stats()["quarantined"] == 1
+        assert t1.stats()["pool_quarantined_total"] == 1
     key = make_key(boom.key(), (16, 128, 128), backend)
     rec = MeasureDB(p).quarantined(key)
     assert rec is not None and rec["attempts"] == 2
@@ -112,8 +112,9 @@ def test_quarantine_persists_and_blocks_reattempts_across_processes(
         t2.drain()
         assert futs[0].result() == float("inf")
         st = t2.stats()
-    assert st["hits"] == 1 and st["misses"] == 0   # never re-submitted
-    assert st["worker_restarts"] == 0              # no worker died for it
+    assert st["transport_hits_total"] == 1         # never re-submitted
+    assert st["transport_misses_total"] == 0
+    assert st["pool_worker_restarts_total"] == 0   # no worker died for it
 
 
 # ---------------------------------------------------------------------------

@@ -247,7 +247,7 @@ def test_backend_mismatch_host_is_rejected():
         assert states.count("rejected") == 1
         assert states.count("connected") == 1
         assert t.health() == "degraded"
-        assert t.stats()["failed_pairs"] == 0
+        assert t.stats()["transport_failed_pairs_total"] == 0
 
 
 def test_server_killed_mid_batch_fails_over_to_surviving_host():
@@ -268,8 +268,8 @@ def test_server_killed_mid_batch_fails_over_to_surviving_host():
         for s, tl, f in zip(sites, tiles, futs):
             assert f.result() == fake_value(s.key(), tuple(tl))
         st = t.stats()
-        assert st["failed_pairs"] == 0
-        assert st["retries"] >= 1
+        assert st["transport_failed_pairs_total"] == 0
+        assert st["transport_retries_total"] >= 1
         assert t.host_states()[a.address] in ("gone", "backing_off",
                                               "connecting")
 
@@ -288,8 +288,10 @@ def test_connection_reset_resends_without_double_timing():
         t.drain()
         assert futs[0].result() == fake_value(tt.MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["retries"] >= 1 and st["failed_pairs"] == 0
-    assert inner.stats()["timed_pairs"] == 1             # never re-timed
+        assert st["transport_retries_total"] >= 1
+        assert st["transport_failed_pairs_total"] == 0
+    # never re-timed
+    assert inner.stats()["transport_timed_pairs_total"] == 1
 
 
 def test_idle_reset_then_resubmit_reconnects():
@@ -305,7 +307,7 @@ def test_idle_reset_then_resubmit_reconnects():
         f2 = t.submit([tt.ATTN], np.array([[64, 128, 1]]))
         t.drain()
         assert f2[0].result() == fake_value(tt.ATTN.key(), (64, 128, 1))
-        assert t.stats()["failed_pairs"] == 0
+        assert t.stats()["transport_failed_pairs_total"] == 0
 
 
 def test_fleet_down_at_construction_raises():
@@ -331,7 +333,7 @@ def test_every_host_dying_fails_pending_closed_and_health_down():
     srv.close()                                          # fleet is gone
     t.drain()                                            # must not hang
     assert [f.result() for f in futs] == [float("inf")] * 2
-    assert t.stats()["failed_pairs"] == 2
+    assert t.stats()["transport_failed_pairs_total"] == 2
     assert t.health() == "down"
     # a submit AFTER the fleet died must fail closed immediately — with
     # no dispatcher left nothing would ever service the queue, so
@@ -383,7 +385,7 @@ def test_facade_socket_transport_end_to_end(tmp_path):
         assert t.backend_key == "fake-backend"
         prog = nv.fit([tt.MM]).tune_sites([tt.MM])
         assert tt.MM.key() in prog.tiles
-        assert t.stats()["timed_pairs"] > 0
+        assert t.stats()["transport_timed_pairs_total"] > 0
         assert nv._spec["hosts"] == [srv.address]
     # hosts= outside the measured oracle is rejected like its siblings
     with pytest.raises(ValueError, match="hosts"):
@@ -495,7 +497,8 @@ def test_fleet_db_gives_second_run_zero_retimings(tmp_path):
         out2 = [f.result() for f in t2.submit(tt.SITES, tt.TILES)]
         st = t2.stats()
     assert out2 == out1
-    assert st["hits"] == 3 and st["timed_pairs"] == 0    # zero re-timings
+    assert st["transport_hits_total"] == 3
+    assert st["transport_timed_pairs_total"] == 0    # zero re-timings
 
 
 def test_versioned_snapshots_keep_n_and_gc(tmp_path):

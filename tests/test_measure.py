@@ -216,7 +216,7 @@ def test_second_run_performs_zero_timings(tmp_path):
     # cold DB: the 3 unique pairs are timed once each — the in-batch
     # duplicate coalesces onto the in-flight key (transport semantics)
     assert spy1.pairs == 3 and fn1.misses == 3
-    assert fn1.transport.stats()["coalesced"] == 1
+    assert fn1.transport.stats()["transport_coalesced_total"] == 1
     np.testing.assert_allclose(out1[3], out1[0])
     fn1.db.close()
 

@@ -379,18 +379,22 @@ class TestInstrumentationParity:
         p_obs, st, svc_st = run(reg)
         p_off, st_off, _ = run(False)
         assert p_obs.tiles == p_off.tiles
-        # legacy keys preserved...
-        for k in ("tunes", "sites_tuned", "agent_inferences", "wall_s",
-                  "fit_wall_s", "tune_wall_s", "in_flight_tunes",
-                  "store_hits", "store_misses", "transport"):
+        # unified spellings only: the PR 8 "one release" aliases are gone
+        for k in ("session_tunes_total", "session_sites_tuned_total",
+                  "session_agent_inferences_total", "session_wall_seconds",
+                  "session_fit_seconds_total", "session_tune_seconds_total",
+                  "session_inflight_tunes", "session_store_hits_total",
+                  "session_store_misses_total", "transport"):
             assert k in st
-        # ...aliased to the unified spellings with equal values
-        assert st["session_tunes_total"] == st["tunes"] == 1
-        assert st["session_sites_tuned_total"] == st["sites_tuned"]
-        assert st["session_fit_seconds_total"] == st["fit_wall_s"]
-        assert svc_st["service_sessions_total"] == \
-            svc_st["sessions_total"] == 1
-        assert svc_st["service_sessions_open"] == svc_st["sessions_open"]
+        for legacy in ("tunes", "sites_tuned", "wall_s", "fit_wall_s",
+                       "in_flight_tunes", "store_hits"):
+            assert legacy not in st
+        assert st["session_tunes_total"] == 1
+        assert st["session_fit_seconds_total"] > 0
+        assert svc_st["service_sessions_total"] == 1
+        assert svc_st["service_sessions_open"] == 1
+        assert "sessions_total" not in svc_st
+        assert "sessions_open" not in svc_st
         # the same series landed in the registry, labelled by session
         snap = reg.snapshot()
         assert snap['session_tunes_total{session="session-1"}'] == 1.0
@@ -398,16 +402,19 @@ class TestInstrumentationParity:
         assert snap['session_tune_seconds{session="session-1"}'
                     ]["count"] == 1
 
-    def test_transport_stats_unified_aliases(self):
+    def test_transport_stats_unified_only(self):
         from repro.measure.transport import InProcessTransport
         t = InProcessTransport(_SpyRunner())
         ss = sites()
         t.submit(ss, np.array([[16, 128, 128], [64, 128, 32]], np.int64))
         s = t.stats()
-        assert s["transport_misses_total"] == s["misses"] == 2
-        assert s["transport_hits_total"] == s["hits"] == 0
-        assert s["transport_hit_ratio"] == s["hit_rate"]
-        assert s["transport_inflight_pairs"] == s["in_flight"] == 0
+        assert s["transport_misses_total"] == 2
+        assert s["transport_hits_total"] == 0
+        assert s["transport_hit_ratio"] == 0.0
+        assert s["transport_inflight_pairs"] == 0
+        for legacy in ("hits", "misses", "coalesced", "timed_pairs",
+                       "failed_pairs", "retries", "in_flight", "hit_rate"):
+            assert legacy not in s
 
     def test_program_store_instrumentation(self, tmp_path):
         from repro.artifacts import ProgramStore

@@ -46,7 +46,8 @@ def test_service_pool_parity_with_inproc_measured(tmp_path):
     with NeuroVectorizer(SMALL, agent="brute", oracle="measured",
                          db_path=p, oracle_kwargs=RUNNER_KW) as nv:
         prog_inproc = nv.fit(SITES).tune_sites(SITES)
-        assert nv.oracle.measure_fn.transport.stats()["timed_pairs"] > 0
+        t = nv.oracle.measure_fn.transport
+        assert t.stats()["transport_timed_pairs_total"] > 0
 
     with TuningService(SMALL, transport="pool", workers=2, db_path=p,
                        **RUNNER_KW) as svc:
@@ -54,8 +55,9 @@ def test_service_pool_parity_with_inproc_measured(tmp_path):
         prog_pool = session.fit(SITES).tune(SITES)
         st = svc.transport.stats()
     assert prog_pool.tiles == prog_inproc.tiles
-    assert st["timed_pairs"] == 0 and st["misses"] == 0   # zero re-timings
-    assert st["hits"] > 0
+    assert st["transport_timed_pairs_total"] == 0 \
+        and st["transport_misses_total"] == 0   # zero re-timings
+    assert st["transport_hits_total"] > 0
 
 
 def test_service_pool_parity_cold_fake_runners():
@@ -88,11 +90,12 @@ def test_tune_async_returns_program_future_and_tracks_stats():
         assert isinstance(prog, TileProgram)
         assert set(prog.tiles) == {x.key() for x in SITES}
         st = s.stats()
-        assert st["tunes"] == 1 and st["sites_tuned"] == 2
-        assert st["in_flight_tunes"] == 0
-        assert st["transport"]["timed_pairs"] > 0
-        assert st["transport"]["in_flight"] == 0
-        assert st["wall_s"] > 0 and st["agent"] == "brute"
+        assert st["session_tunes_total"] == 1
+        assert st["session_sites_tuned_total"] == 2
+        assert st["session_inflight_tunes"] == 0
+        assert st["transport"]["transport_timed_pairs_total"] > 0
+        assert st["transport"]["transport_inflight_pairs"] == 0
+        assert st["session_wall_seconds"] > 0 and st["agent"] == "brute"
 
 
 def test_sessions_share_one_transport_and_its_cache(tmp_path):
@@ -108,11 +111,11 @@ def test_sessions_share_one_transport_and_its_cache(tmp_path):
         p2 = s2.fit(SITES).tune(SITES)
         assert p1.tiles == p2.tiles
         st2 = s2.stats()["transport"]            # deltas since s2 opened
-        assert st2["timed_pairs"] == 0
-        assert svc.stats()["sessions_total"] == 2
+        assert st2["transport_timed_pairs_total"] == 0
+        assert svc.stats()["service_sessions_total"] == 2
     # MeasuredEnv caches per oracle; session 2 has its own env, so its
     # sweep re-queries the transport and must land on the cache
-    assert st2["hits"] > 0
+    assert st2["transport_hits_total"] > 0
 
 
 def test_session_model_oracle_needs_no_transport_traffic():
@@ -120,8 +123,9 @@ def test_session_model_oracle_needs_no_transport_traffic():
         s = svc.open_session(agent="brute", oracle="model")
         prog = s.fit(SITES).tune(SITES)
         assert len(prog.tiles) == 2
-        assert svc.transport.stats()["misses"] == 0   # untouched
-        assert s.stats()["transport"]["timed_pairs"] == 0
+        st = svc.transport.stats()
+        assert st["transport_misses_total"] == 0      # untouched
+        assert s.stats()["transport"]["transport_timed_pairs_total"] == 0
 
 
 def test_service_validation_and_lifecycle():

@@ -57,11 +57,19 @@ def test_conformance_protocol_and_values(kind):
             assert f.done()
             assert f.result() == fake_value(s.key(), tile)
         st = t.stats()
-        assert st["misses"] == 3 and st["timed_pairs"] == 3
-        assert st["in_flight"] == 0
-        for key in ("hits", "misses", "coalesced", "timed_pairs",
-                    "failed_pairs", "retries", "in_flight", "hit_rate"):
+        assert st["transport_misses_total"] == 3
+        assert st["transport_timed_pairs_total"] == 3
+        assert st["transport_inflight_pairs"] == 0
+        for key in ("transport_hits_total", "transport_misses_total",
+                    "transport_coalesced_total",
+                    "transport_timed_pairs_total",
+                    "transport_failed_pairs_total",
+                    "transport_retries_total",
+                    "transport_inflight_pairs", "transport_hit_ratio"):
             assert key in st
+        for legacy in ("hits", "misses", "timed_pairs", "in_flight",
+                       "hit_rate"):
+            assert legacy not in st
 
 
 @pytest.mark.parametrize("kind", TRANSPORTS)
@@ -76,8 +84,9 @@ def test_conformance_duplicate_keys_coalesce(kind):
         vals = [f.result() for f in futs]
         assert vals[:4] == [fake_value(MM.key(), (16, 128, 128))] * 4
         st = t.stats()
-        assert st["misses"] == 2 and st["coalesced"] == 3
-        assert st["timed_pairs"] == 2
+        assert st["transport_misses_total"] == 2
+        assert st["transport_coalesced_total"] == 3
+        assert st["transport_timed_pairs_total"] == 2
 
 
 @pytest.mark.parametrize("kind", TRANSPORTS)
@@ -91,8 +100,10 @@ def test_conformance_db_hits_and_zero_retiming(kind, tmp_path):
         out2 = [f.result() for f in futs]
         st = t2.stats()
     assert out2 == out1
-    assert st["hits"] == 3 and st["misses"] == 0
-    assert st["timed_pairs"] == 0 and st["hit_rate"] == 1.0
+    assert st["transport_hits_total"] == 3
+    assert st["transport_misses_total"] == 0
+    assert st["transport_timed_pairs_total"] == 0
+    assert st["transport_hit_ratio"] == 1.0
 
 
 @pytest.mark.parametrize("kind", TRANSPORTS)
@@ -123,7 +134,8 @@ def test_conformance_failure_fails_closed(kind):
         assert futs[0].result() == float("inf")
         assert futs[1].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["failed_pairs"] == 1 and st["timed_pairs"] == 1
+        assert st["transport_failed_pairs_total"] == 1
+        assert st["transport_timed_pairs_total"] == 1
 
 
 @pytest.mark.parametrize("kind", TRANSPORTS)
@@ -151,8 +163,9 @@ def test_pool_worker_death_requeues_and_recovers(tmp_path, monkeypatch):
         assert futs[0].result() == fake_value(boom.key(), (16, 128, 128))
         assert futs[1].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["retries"] >= 1 and st["worker_restarts"] >= 1
-        assert st["failed_pairs"] == 0
+        assert st["transport_retries_total"] >= 1
+        assert st["pool_worker_restarts_total"] >= 1
+        assert st["transport_failed_pairs_total"] == 0
     assert os.path.exists(sentinel)                # it really did die
 
 
@@ -169,8 +182,9 @@ def test_pool_worker_death_fails_closed_after_max_attempts(tmp_path):
         assert futs[0].result() == float("inf")
         assert futs[1].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["retries"] == 1                  # attempt 1 requeued
-        assert st["failed_pairs"] == 1 and st["timed_pairs"] == 1
+        assert st["transport_retries_total"] == 1  # attempt 1 requeued
+        assert st["transport_failed_pairs_total"] == 1
+        assert st["transport_timed_pairs_total"] == 1
         backend = t.backend_key
     # the fail-closed verdict is persisted as null -> inf: a later run
     # serves it from the DB instead of crashing more workers
@@ -189,7 +203,8 @@ def test_pool_cross_submit_inflight_coalescing():
         assert f1[0] is f2[0]
         assert f1[0].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["misses"] == 1 and st["coalesced"] == 1
+        assert st["transport_misses_total"] == 1
+        assert st["transport_coalesced_total"] == 1
 
 
 def test_pool_raising_runner_fails_closed_without_killing_worker():
@@ -202,8 +217,9 @@ def test_pool_raising_runner_fails_closed_without_killing_worker():
         assert futs[0].result() == float("inf")
         assert futs[1].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["failed_pairs"] == 1 and st["retries"] == 0
-        assert st["worker_restarts"] == 0
+        assert st["transport_failed_pairs_total"] == 1
+        assert st["transport_retries_total"] == 0
+        assert st["pool_worker_restarts_total"] == 0
 
 
 def test_pool_wedged_worker_hits_job_timeout_and_fails_closed():
@@ -217,8 +233,9 @@ def test_pool_wedged_worker_hits_job_timeout_and_fails_closed():
         assert futs[0].result() == float("inf")
         assert futs[1].result() == fake_value(MM.key(), (16, 128, 128))
         st = t.stats()
-        assert st["failed_pairs"] == 1 and st["retries"] == 1
-        assert st["worker_restarts"] >= 1
+        assert st["transport_failed_pairs_total"] == 1
+        assert st["transport_retries_total"] == 1
+        assert st["pool_worker_restarts_total"] >= 1
 
 
 def test_inproc_raising_runner_resolves_futures_before_propagating():
@@ -235,7 +252,8 @@ def test_inproc_raising_runner_resolves_futures_before_propagating():
         t.submit([MM], np.array([[16, 128, 128]]))
     t.drain()                                      # must not hang
     st = t.stats()
-    assert st["failed_pairs"] == 1 and st["in_flight"] == 0
+    assert st["transport_failed_pairs_total"] == 1
+    assert st["transport_inflight_pairs"] == 0
     # the key is re-submittable (not stuck on a dead in-flight future)
     t.runner = FakeRunner()
     futs = t.submit([MM], np.array([[16, 128, 128]]))
